@@ -1,0 +1,69 @@
+"""Paper Fig. 5: tuning curves — BO vs GA vs NMS on every workload.
+
+Default: surrogate objective, 50 iterations, 3 seeds (seconds).
+``--measured``: real wall-clock measurement of each configuration on the
+local device (the paper's harness; minutes).  CSV rows:
+
+    fig5,<workload>,<algo>,<seed>,<iter>,<best_so_far>
+    fig5_final,<workload>,<algo>,<mean_best>,<std_best>
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from benchmarks.workloads import (
+    MEASURED_WORKLOADS,
+    measured_make_step,
+    surrogate_objective,
+)
+from repro.core import SearchSpace, Tuner, TunerConfig
+
+ALGOS = ("bo", "ga", "nms")
+
+
+def run(measured: bool = False, budget: int = 50, seeds: int = 3,
+        emit=print):
+    summary = {}
+    for w in MEASURED_WORKLOADS:
+        space = SearchSpace.from_dicts(w["space"])
+        for algo in ALGOS:
+            finals = []
+            for seed in range(seeds):
+                if measured:
+                    from repro.tuning.evaluator import WallClockEvaluator
+
+                    obj = WallClockEvaluator(measured_make_step(w), iters=2)
+                else:
+                    obj = surrogate_objective(w)
+                t = Tuner(obj, space,
+                          TunerConfig(algorithm=algo, budget=budget,
+                                      seed=seed, verbose=False))
+                h = t.run()
+                for it, best in enumerate(h.best_curve()):
+                    emit(f"fig5,{w['name']},{algo},{seed},{it},{best:.4f}")
+                finals.append(h.best().value)
+            summary[(w["name"], algo)] = (float(np.mean(finals)),
+                                          float(np.std(finals)))
+            emit(f"fig5_final,{w['name']},{algo},"
+                 f"{np.mean(finals):.4f},{np.std(finals):.4f}")
+    # who wins each workload?
+    for w in MEASURED_WORKLOADS:
+        scores = {a: summary[(w["name"], a)][0] for a in ALGOS}
+        winner = max(scores, key=scores.get)
+        emit(f"fig5_winner,{w['name']},{winner}")
+    return summary
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--measured", action="store_true")
+    ap.add_argument("--budget", type=int, default=50)
+    ap.add_argument("--seeds", type=int, default=3)
+    args = ap.parse_args(argv)
+    run(measured=args.measured, budget=args.budget, seeds=args.seeds)
+
+
+if __name__ == "__main__":
+    main()

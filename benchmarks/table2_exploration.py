@@ -1,0 +1,49 @@
+"""Paper Table 2: per-parameter sampled-range coverage per algorithm.
+
+For each workload x algorithm, runs the 50-iteration tuning and reports
+the (min,max) of sampled values vs the tunable range, as a percentage —
+the paper's exploration/exploitation diagnostic (BO ~100%, GA <50%, NMS
+between).
+
+CSV rows: table2,<workload>,<algo>,<param>,<coverage_pct>
+          table2_mean,<algo>,<mean_coverage_pct>
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from benchmarks.workloads import MEASURED_WORKLOADS, surrogate_objective
+from repro.core import SearchSpace, Tuner, TunerConfig
+
+ALGOS = ("bo", "ga", "nms")
+
+
+def run(budget: int = 50, emit=print):
+    per_algo = {a: [] for a in ALGOS}
+    for w in MEASURED_WORKLOADS:
+        space = SearchSpace.from_dicts(w["space"])
+        obj = surrogate_objective(w)
+        for algo in ALGOS:
+            t = Tuner(obj, space, TunerConfig(algorithm=algo, budget=budget,
+                                              seed=0, verbose=False))
+            h = t.run()
+            fr = h.sampled_range_fraction()
+            for name, f in fr.items():
+                emit(f"table2,{w['name']},{algo},{name},{100*f:.0f}")
+                per_algo[algo].append(f)
+    means = {}
+    for algo in ALGOS:
+        means[algo] = float(np.mean(per_algo[algo]))
+        emit(f"table2_mean,{algo},{100*means[algo]:.1f}")
+    return means
+
+
+def main(argv=None):
+    argparse.ArgumentParser().parse_args(argv)
+    run()
+
+
+if __name__ == "__main__":
+    main()

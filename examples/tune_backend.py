@@ -1,0 +1,32 @@
+"""Tune the production backend for one assigned (arch x shape) cell with
+the roofline objective — the paper's methodology pointed at the 256-chip
+mesh (each evaluation lowers + compiles the cell).
+
+    PYTHONPATH=src python examples/tune_backend.py \
+        [--arch qwen3-moe-30b-a3b] [--shape train_4k] [--budget 12]
+
+NOTE: every evaluation is a real XLA compile (~30-90 s on this CPU), so
+the default budget is small; `python -m repro.launch.tune` is the full
+50-iteration driver used for EXPERIMENTS.md §Perf.
+"""
+import argparse
+
+from repro.launch.tune import main as tune_main
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-moe-30b-a3b")
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--budget", type=int, default=12)
+    ap.add_argument("--algo", default="bo")
+    args = ap.parse_args()
+    tune_main([
+        "--arch", args.arch, "--shape", args.shape, "--algo", args.algo,
+        "--budget", str(args.budget),
+        "--cache", "artifacts/tune_cache.json",
+    ])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,20 @@
+"""Qwen3-30B-A3B — fine-grained MoE, 128 experts top-8.
+
+[hf:Qwen/Qwen3-30B-A3B]  48L d_model=2048 32H (GQA kv=4) d_ff(expert)=768
+vocab=151936, every layer MoE.
+"""
+from repro.configs.base import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-moe-30b-a3b",
+    family="moe",
+    num_layers=48,
+    d_model=2048,
+    num_heads=32,
+    num_kv_heads=4,
+    d_ff=768,
+    vocab_size=151936,
+    head_dim=128,
+    rope_theta=1_000_000.0,
+    moe=MoEConfig(num_experts=128, top_k=8, d_expert=768, every=1),
+)

@@ -1,0 +1,19 @@
+"""The paper's primary contribution: gradient-free auto-tuning of backend
+parameters for training/inference throughput — BO (GP + SMSego), GA, and
+Nelder-Mead simplex behind a common engine interface (paper Fig. 4)."""
+from repro.core.bayesopt import BayesOpt
+from repro.core.engine import Engine
+from repro.core.exhaustive import Exhaustive
+from repro.core.genetic import GeneticAlgorithm
+from repro.core.gp import GaussianProcess
+from repro.core.history import History
+from repro.core.neldermead import NelderMead
+from repro.core.random_search import RandomSearch
+from repro.core.space import CatDim, IntDim, SearchSpace
+from repro.core.tuner import ENGINES, Tuner, TunerConfig
+
+__all__ = [
+    "BayesOpt", "CatDim", "ENGINES", "Engine", "Exhaustive",
+    "GaussianProcess", "GeneticAlgorithm", "History", "IntDim", "NelderMead",
+    "RandomSearch", "SearchSpace", "Tuner", "TunerConfig",
+]

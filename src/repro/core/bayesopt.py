@@ -1,0 +1,115 @@
+"""Bayesian optimization engine (paper §2.2).
+
+GP surrogate (gp.py) + acquisition maximization over a candidate set.
+Acquisitions:
+
+* ``smsego`` (paper default) — for each candidate, the optimistic estimate
+  mu + c*sigma is compared against the best evaluation observed so far;
+  the candidate maximizing the potential *extension* of the best value is
+  selected (the single-objective S-metric-selection gain).
+* ``ei``  — expected improvement (closed form).
+* ``ucb`` — upper confidence bound.
+
+The candidate set is the full grid when small, otherwise random samples
+plus local perturbations of the incumbent (exploitation neighborhood).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict
+
+import numpy as np
+
+from repro.core.engine import Engine
+from repro.core.gp import GaussianProcess
+from repro.core.history import History
+from repro.core.space import SearchSpace
+
+_SQRT2 = math.sqrt(2.0)
+
+
+def _norm_cdf(z):
+    return 0.5 * (1.0 + np.vectorize(math.erf)(z / _SQRT2))
+
+
+def _norm_pdf(z):
+    return np.exp(-0.5 * z * z) / math.sqrt(2 * math.pi)
+
+
+class BayesOpt(Engine):
+    name = "bo"
+
+    def __init__(
+        self,
+        space: SearchSpace,
+        seed: int = 0,
+        n_init: int = 8,
+        acquisition: str = "smsego",
+        kappa: float = 2.0,
+        max_candidates: int = 4096,
+        kernel: str = "matern52",
+    ):
+        super().__init__(space, seed)
+        self.n_init = min(n_init, max(2, space.grid_size() // 2))
+        self.acquisition = acquisition
+        self.kappa = kappa
+        self.max_candidates = max_candidates
+        self.kernel = kernel
+        self._init_points = None
+
+    def _candidates(self, history: History):
+        if self.space.grid_size() <= self.max_candidates:
+            cands = [p for p in self.space.enumerate() if not history.seen(p)]
+            if cands:
+                return cands
+            return list(self.space.enumerate())
+        cands = self.space.sample(self.rng, self.max_candidates // 2)
+        # local neighborhood of the incumbent (exploitation half)
+        best = history.best().point
+        for _ in range(self.max_candidates // 2):
+            cands.append(self.space.perturb(self.rng, best, radius=2))
+        seen_keys = set()
+        out = []
+        for c in cands:
+            k = self.space.key(c)
+            if k not in seen_keys and not history.seen(c):
+                seen_keys.add(k)
+                out.append(c)
+        return out or cands
+
+    def suggest(self, history: History) -> Dict:
+        if self._init_points is None:
+            self._init_points = self.space.sample_lhs(self.rng, self.n_init)
+        if len(history) < self.n_init:
+            return self._unseen(history, self._init_points[len(history)])
+
+        X, y = history.encoded()
+        finite = np.isfinite(y)
+        if finite.sum() < 2:
+            return self._unseen(history, self.space.sample(self.rng, 1)[0])
+        # failed configs (OOM etc.) get the worst finite value (pessimism)
+        y = np.where(finite, y, y[finite].min())
+
+        gp = GaussianProcess(kind=self.kernel).fit(X, y)
+        cands = self._candidates(history)
+        Xs = self.space.encode_many(cands)
+        post = gp.posterior(Xs)
+        y_best = float(np.max(y))
+
+        if self.acquisition == "ucb":
+            acq = post.mu + self.kappa * post.sigma
+        elif self.acquisition == "ei":
+            z = (post.mu - y_best) / np.maximum(post.sigma, 1e-12)
+            acq = (post.mu - y_best) * _norm_cdf(z) + post.sigma * _norm_pdf(z)
+        elif self.acquisition == "smsego":
+            # single-objective SMSego gain: how far the optimistic estimate
+            # extends the best observation (epsilon-dominance guard keeps
+            # pure-exploitation candidates from pinning the search)
+            optimistic = post.mu + self.kappa * post.sigma
+            eps = 1e-3 * max(abs(y_best), 1.0)
+            gain = optimistic - (y_best + eps)
+            acq = np.where(gain > 0, gain, gain * 1e-3)  # soft penalty below best
+        else:
+            raise ValueError(self.acquisition)
+
+        return dict(cands[int(np.argmax(acq))])

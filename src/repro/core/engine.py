@@ -1,0 +1,39 @@
+"""Algorithm-engine interface (paper Fig. 4: algorithmic engines behind a
+selection switch, all sharing the same history / system-under-test path)."""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.core.history import History
+from repro.core.space import SearchSpace
+
+
+class Engine:
+    name = "base"
+
+    def __init__(self, space: SearchSpace, seed: int = 0):
+        self.space = space
+        self.rng = np.random.default_rng(seed)
+
+    def suggest(self, history: History) -> Dict:
+        raise NotImplementedError
+
+    def observe(self, point: Dict, value: float) -> None:  # optional state
+        pass
+
+    # -- helpers -------------------------------------------------------------
+    def _unseen(self, history: History, point: Dict, tries: int = 64) -> Dict:
+        """Nudge a suggestion off already-evaluated grid points."""
+        cand = point
+        for radius in [1, 1, 2, 2, 3, 4] * (tries // 6 + 1):
+            if not history.seen(cand):
+                return cand
+            cand = self.space.perturb(self.rng, cand, radius=radius)
+        # grid may be nearly exhausted: fall back to random
+        for _ in range(tries):
+            cand = self.space.sample(self.rng, 1)[0]
+            if not history.seen(cand):
+                return cand
+        return cand

@@ -1,0 +1,19 @@
+"""Exhaustive grid sweep (paper §4.3 Fig. 6 + the §1 cost argument)."""
+from __future__ import annotations
+
+from typing import Dict, Iterator
+
+from repro.core.engine import Engine
+from repro.core.history import History
+from repro.core.space import SearchSpace
+
+
+class Exhaustive(Engine):
+    name = "exhaustive"
+
+    def __init__(self, space: SearchSpace, seed: int = 0):
+        super().__init__(space, seed)
+        self._it: Iterator[Dict] = space.enumerate()
+
+    def suggest(self, history: History) -> Dict:
+        return next(self._it)

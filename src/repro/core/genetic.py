@@ -1,0 +1,71 @@
+"""Genetic-algorithm engine (paper §2.2).
+
+Faithful to the paper's description: at each iteration the history is
+reordered by a fitness function, the inputs of the two fittest pairs are
+selected as parents, a child is produced by *crossover* (each component
+copied from one of the two parents) and *mutation* (components flipped to
+purely random values with small probability).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import numpy as np
+
+from repro.core.engine import Engine
+from repro.core.history import History
+from repro.core.space import SearchSpace
+
+
+class GeneticAlgorithm(Engine):
+    name = "ga"
+
+    def __init__(
+        self,
+        space: SearchSpace,
+        seed: int = 0,
+        n_init: int = 6,
+        mutation_rate: float = 0.15,
+        tournament: int = 0,  # 0 => paper's plain two-fittest selection
+    ):
+        super().__init__(space, seed)
+        self.n_init = min(n_init, max(2, space.grid_size() // 2))
+        self.mutation_rate = mutation_rate
+        self.tournament = tournament
+        self._init_points = None
+
+    def _select_parents(self, history: History):
+        order = sorted(
+            (e for e in history.evals if np.isfinite(e.value)),
+            key=lambda e: -e.value,
+        )
+        if len(order) < 2:
+            return None
+        if self.tournament:
+            pick = lambda: max(
+                self.rng.choice(order, size=min(self.tournament, len(order)),
+                                replace=False),
+                key=lambda e: e.value,
+            )
+            return pick().point, pick().point
+        return order[0].point, order[1].point
+
+    def suggest(self, history: History) -> Dict:
+        if self._init_points is None:
+            self._init_points = self.space.sample_lhs(self.rng, self.n_init)
+        if len(history) < self.n_init:
+            return self._unseen(history, self._init_points[len(history)])
+
+        parents = self._select_parents(history)
+        if parents is None:
+            return self._unseen(history, self.space.sample(self.rng, 1)[0])
+        pa, pb = parents
+
+        child = {}
+        for d in self.space.dims:
+            # crossover: copy the component from one of the two parents
+            child[d.name] = pa[d.name] if self.rng.random() < 0.5 else pb[d.name]
+            # mutation: occasionally a purely random value
+            if self.rng.random() < self.mutation_rate:
+                child[d.name] = d.values[self.rng.integers(len(d.values))]
+        return self._unseen(history, child)

@@ -1,0 +1,170 @@
+"""Gaussian-process surrogate (paper §2.2) — pure JAX.
+
+ARD RBF / Matérn-5/2 kernels; hyperparameters (log-lengthscales, log
+signal variance, log noise) fit by maximizing the log marginal likelihood
+with Adam on ``jax.grad`` (the GP itself is white-box — the *objective* is
+the black box).  Cholesky-based posterior, y standardized internally.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_JITTER = 1e-5
+
+
+def _sqdist(X1: jnp.ndarray, X2: jnp.ndarray, ls: jnp.ndarray) -> jnp.ndarray:
+    a = X1 / ls
+    b = X2 / ls
+    return (
+        jnp.sum(a * a, -1)[:, None]
+        + jnp.sum(b * b, -1)[None, :]
+        - 2.0 * a @ b.T
+    ).clip(0.0)
+
+
+def kernel_fn(kind: str, X1, X2, ls, sigma2):
+    d2 = _sqdist(X1, X2, ls)
+    if kind == "rbf":
+        return sigma2 * jnp.exp(-0.5 * d2)
+    if kind == "matern52":
+        d = jnp.sqrt(d2 + 1e-12)
+        s = jnp.sqrt(5.0) * d
+        return sigma2 * (1.0 + s + s * s / 3.0) * jnp.exp(-s)
+    raise ValueError(kind)
+
+
+@partial(jax.jit, static_argnames=("kind",))
+def _neg_mll(params: Dict, X, y, kind: str):
+    ls = jnp.exp(params["log_ls"])
+    sigma2 = jnp.exp(params["log_sigma2"])
+    noise = jnp.exp(params["log_noise"]) + _JITTER
+    n = X.shape[0]
+    K = kernel_fn(kind, X, X, ls, sigma2) + noise * jnp.eye(n)
+    Lc = jnp.linalg.cholesky(K)
+    alpha = jax.scipy.linalg.cho_solve((Lc, True), y)
+    mll = (
+        -0.5 * y @ alpha
+        - jnp.sum(jnp.log(jnp.diagonal(Lc)))
+        - 0.5 * n * jnp.log(2 * jnp.pi)
+    )
+    return -mll
+
+
+@partial(jax.jit, static_argnames=("kind", "steps"))
+def _fit(params0: Dict, X, y, kind: str, steps: int, lr: float):
+    grad = jax.grad(_neg_mll)
+
+    def body(carry, _):
+        params, m, v, t = carry
+        g = grad(params, X, y, kind)
+        t = t + 1
+        m = jax.tree_util.tree_map(lambda m_, g_: 0.9 * m_ + 0.1 * g_, m, g)
+        v = jax.tree_util.tree_map(lambda v_, g_: 0.999 * v_ + 0.001 * g_ * g_, v, g)
+        mh = jax.tree_util.tree_map(lambda m_: m_ / (1 - 0.9 ** t), m)
+        vh = jax.tree_util.tree_map(lambda v_: v_ / (1 - 0.999 ** t), v)
+        params = jax.tree_util.tree_map(
+            lambda p, m_, v_: p - lr * m_ / (jnp.sqrt(v_) + 1e-8), params, mh, vh
+        )
+        # keep hyperparameters in a sane box
+        params = {
+            "log_ls": jnp.clip(params["log_ls"], np.log(1e-2), np.log(1e2)),
+            "log_sigma2": jnp.clip(params["log_sigma2"], np.log(1e-3), np.log(1e3)),
+            "log_noise": jnp.clip(params["log_noise"], np.log(1e-4), np.log(1.0)),
+        }
+        return (params, m, v, t), None
+
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params0)
+    (params, _, _, _), _ = jax.lax.scan(
+        body, (params0, zeros, zeros, jnp.zeros((), jnp.int32)), None, length=steps
+    )
+    return params
+
+
+@partial(jax.jit, static_argnames=("kind",))
+def _posterior(params: Dict, X, y, Xs, kind: str):
+    ls = jnp.exp(params["log_ls"])
+    sigma2 = jnp.exp(params["log_sigma2"])
+    noise = jnp.exp(params["log_noise"]) + _JITTER
+    n = X.shape[0]
+    K = kernel_fn(kind, X, X, ls, sigma2) + noise * jnp.eye(n)
+    Lc = jnp.linalg.cholesky(K)
+    Ks = kernel_fn(kind, X, Xs, ls, sigma2)  # (n, m)
+    alpha = jax.scipy.linalg.cho_solve((Lc, True), y)
+    mu = Ks.T @ alpha
+    v = jax.scipy.linalg.solve_triangular(Lc, Ks, lower=True)
+    var = sigma2 - jnp.sum(v * v, axis=0)
+    return mu, jnp.clip(var, 1e-12)
+
+
+@dataclass
+class GPResult:
+    mu: np.ndarray
+    sigma: np.ndarray
+
+
+class GaussianProcess:
+    """Fit on (X in [0,1]^d, y); query posterior at candidate points."""
+
+    def __init__(self, kind: str = "matern52", fit_steps: int = 120, lr: float = 0.05):
+        self.kind = kind
+        self.fit_steps = fit_steps
+        self.lr = lr
+        self._params = None
+        self._X = None
+        self._y = None
+        self._y_mean = 0.0
+        self._y_std = 1.0
+
+    def fit(self, X: np.ndarray, y: np.ndarray) -> "GaussianProcess":
+        X = jnp.asarray(X, jnp.float64 if jax.config.jax_enable_x64 else jnp.float32)
+        yn = np.asarray(y, np.float64)
+        self._y_mean = float(yn.mean())
+        self._y_std = float(yn.std() + 1e-9)
+        y_std = jnp.asarray((yn - self._y_mean) / self._y_std, X.dtype)
+        d = X.shape[1]
+        params0 = {
+            "log_ls": jnp.full((d,), np.log(0.3), X.dtype),
+            "log_sigma2": jnp.asarray(0.0, X.dtype),
+            "log_noise": jnp.asarray(np.log(1e-3), X.dtype),
+        }
+        fitted = _fit(params0, X, y_std, self.kind, self.fit_steps, self.lr)
+        # fp32 robustness: if the fitted hyperparameters make the Cholesky
+        # blow up (near-singular K), fall back to safe defaults with a
+        # larger noise floor.
+        nll = _neg_mll(fitted, X, y_std, self.kind)
+        if not bool(jnp.isfinite(nll)):
+            fitted = {
+                "log_ls": jnp.full_like(params0["log_ls"], np.log(0.3)),
+                "log_sigma2": jnp.zeros_like(params0["log_sigma2"]),
+                "log_noise": jnp.full_like(params0["log_noise"], np.log(1e-2)),
+            }
+        self._params = fitted
+        self._X, self._y = X, y_std
+        return self
+
+    def posterior(self, Xs: np.ndarray) -> GPResult:
+        assert self._params is not None, "fit first"
+        mu, var = _posterior(
+            self._params, self._X, self._y, jnp.asarray(Xs, self._X.dtype), self.kind
+        )
+        mu, var = np.asarray(mu), np.asarray(var)
+        if not np.isfinite(mu).all():  # last-resort refit with big noise
+            safe = dict(self._params)
+            safe["log_noise"] = jnp.full_like(self._params["log_noise"],
+                                              np.log(1e-1))
+            mu, var = _posterior(safe, self._X, self._y,
+                                 jnp.asarray(Xs, self._X.dtype), self.kind)
+            mu, var = np.asarray(mu), np.asarray(var)
+        mu = np.nan_to_num(mu, nan=0.0) * self._y_std + self._y_mean
+        sigma = np.sqrt(np.clip(np.nan_to_num(var, nan=1.0), 1e-12, None)) * self._y_std
+        return GPResult(mu, sigma)
+
+    @property
+    def lengthscales(self) -> np.ndarray:
+        return np.exp(np.asarray(self._params["log_ls"]))

@@ -1,0 +1,126 @@
+"""Evaluation history D = {(x_i, y_i)} (paper §2.2) + persistence.
+
+The history is the single source of truth shared by every algorithm
+engine (paper Fig. 4: common data-acquisition module).  It also implements
+the paper's Table-2 analysis: per-parameter sampled-range coverage.
+"""
+from __future__ import annotations
+
+import json
+import math
+import pathlib
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.space import SearchSpace
+
+
+@dataclass
+class Evaluation:
+    point: Dict
+    value: float  # objective (throughput; higher is better)
+    index: int
+    cost_seconds: float = 0.0
+    meta: dict = field(default_factory=dict)
+
+
+class History:
+    def __init__(self, space: SearchSpace):
+        self.space = space
+        self.evals: List[Evaluation] = []
+        self._by_key: Dict[Tuple, Evaluation] = {}
+
+    def __len__(self) -> int:
+        return len(self.evals)
+
+    def add(self, point: Dict, value: float, cost_seconds: float = 0.0,
+            meta: Optional[dict] = None) -> Evaluation:
+        ev = Evaluation(dict(point), float(value), len(self.evals),
+                        cost_seconds, meta or {})
+        self.evals.append(ev)
+        self._by_key[self.space.key(point)] = ev
+        return ev
+
+    def lookup(self, point: Dict) -> Optional[Evaluation]:
+        return self._by_key.get(self.space.key(point))
+
+    def seen(self, point: Dict) -> bool:
+        return self.space.key(point) in self._by_key
+
+    def best(self) -> Evaluation:
+        finite = [e for e in self.evals if math.isfinite(e.value)]
+        assert finite, "no finite evaluations"
+        return max(finite, key=lambda e: e.value)
+
+    def best_curve(self) -> List[float]:
+        """Running best value per iteration (paper Fig. 5 curves)."""
+        out, cur = [], -math.inf
+        for e in self.evals:
+            if math.isfinite(e.value):
+                cur = max(cur, e.value)
+            out.append(cur)
+        return out
+
+    def points(self) -> List[Dict]:
+        return [e.point for e in self.evals]
+
+    def values(self) -> np.ndarray:
+        return np.array([e.value for e in self.evals])
+
+    def encoded(self) -> Tuple[np.ndarray, np.ndarray]:
+        X = self.space.encode_many(self.points())
+        y = self.values()
+        return X, y
+
+    # -- Table 2 analysis ----------------------------------------------------
+    def sampled_ranges(self) -> Dict[str, Tuple]:
+        """Per-parameter (min, max) of the values actually sampled."""
+        out = {}
+        for d in self.space.dims:
+            samples = [e.point[d.name] for e in self.evals]
+            if all(isinstance(v, (int, float)) for v in d.values):
+                out[d.name] = (min(samples), max(samples))
+            else:  # categorical: report set coverage
+                out[d.name] = tuple(sorted(set(map(str, samples))))
+        return out
+
+    def sampled_range_fraction(self) -> Dict[str, float]:
+        """Fraction of each tunable range covered (paper Table 2 %)."""
+        out = {}
+        for d in self.space.dims:
+            samples = [e.point[d.name] for e in self.evals]
+            vals = d.values
+            if all(isinstance(v, (int, float)) for v in vals) and len(vals) > 1:
+                lo, hi = min(vals), max(vals)
+                out[d.name] = (max(samples) - min(samples)) / (hi - lo)
+            else:
+                out[d.name] = len(set(samples)) / len(vals)
+        return out
+
+    # -- persistence (tuner fault tolerance) ---------------------------------
+    def to_json(self) -> str:
+        return json.dumps(
+            [
+                {"point": e.point, "value": e.value, "index": e.index,
+                 "cost_seconds": e.cost_seconds, "meta": e.meta}
+                for e in self.evals
+            ]
+        )
+
+    def save(self, path) -> None:
+        p = pathlib.Path(path)
+        p.parent.mkdir(parents=True, exist_ok=True)
+        tmp = p.with_suffix(".tmp")
+        tmp.write_text(self.to_json())
+        tmp.replace(p)  # atomic
+
+    @classmethod
+    def load(cls, path, space: SearchSpace) -> "History":
+        h = cls(space)
+        for rec in json.loads(pathlib.Path(path).read_text()):
+            h.add(rec["point"], rec["value"], rec.get("cost_seconds", 0.0),
+                  rec.get("meta"))
+        return h

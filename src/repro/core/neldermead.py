@@ -1,0 +1,128 @@
+"""Nelder-Mead simplex engine on the integer-stepped grid (paper §2.2;
+TensorTuner's algorithm).
+
+Standard reflection / expansion / contraction / shrink in the unit-cube
+encoding, with every probe snapped to the grid.  The engine is a state
+machine driven by ``suggest``/``observe`` so it plugs into the same
+iteration loop as BO and GA; NMS's known failure mode — clustering around
+local optima and never touching parameter-range extremes — is exactly
+what the paper's Table 2 measures.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.engine import Engine
+from repro.core.history import History
+from repro.core.space import SearchSpace
+
+ALPHA, GAMMA, RHO, SIGMA = 1.0, 2.0, 0.5, 0.5
+
+
+class NelderMead(Engine):
+    name = "nms"
+
+    def __init__(self, space: SearchSpace, seed: int = 0, init_radius: float = 0.25):
+        super().__init__(space, seed)
+        d = space.n_dims
+        x0 = self.rng.random(d)
+        verts = [x0]
+        for i in range(d):
+            v = x0.copy()
+            v[i] = np.clip(v[i] + (init_radius if v[i] < 0.5 else -init_radius), 0, 1)
+            verts.append(v)
+        self._pending: List[np.ndarray] = verts  # vertices awaiting values
+        self._simplex: List[Tuple[np.ndarray, float]] = []
+        self._phase = "init"
+        self._xr: Optional[np.ndarray] = None
+        self._fr: Optional[float] = None
+        self._xprobe: Optional[np.ndarray] = None
+        self._shrink_queue: List[np.ndarray] = []
+
+    # -- state machine --------------------------------------------------------
+    def _order(self):
+        self._simplex.sort(key=lambda t: -t[1])  # best (max) first
+
+    def _centroid(self) -> np.ndarray:
+        pts = [x for x, _ in self._simplex[:-1]]
+        return np.mean(pts, axis=0)
+
+    def suggest(self, history: History) -> Dict:
+        if self._phase == "init":
+            x = self._pending[len(self._simplex)]
+            return self.space.decode(x)
+        if self._phase in ("reflect", "expand", "contract", "shrink"):
+            return self.space.decode(self._xprobe)
+        raise RuntimeError(self._phase)
+
+    def observe(self, point: Dict, value: float) -> None:
+        if not np.isfinite(value):
+            value = -np.inf
+        x = self.space.encode(point)
+        if self._phase == "init":
+            self._simplex.append((x, value))
+            if len(self._simplex) == len(self._pending):
+                self._start_reflect()
+            return
+
+        if self._phase == "reflect":
+            self._order()
+            f_best = self._simplex[0][1]
+            f_second_worst = self._simplex[-2][1]
+            f_worst = self._simplex[-1][1]
+            self._xr, self._fr = x, value
+            if value > f_best:
+                xc = self._centroid()
+                self._xprobe = np.clip(xc + GAMMA * (self._xr - xc), 0, 1)
+                self._phase = "expand"
+            elif value > f_second_worst:
+                self._simplex[-1] = (self._xr, value)
+                self._start_reflect()
+            else:
+                xc = self._centroid()
+                base = self._xr if value > f_worst else self._simplex[-1][0]
+                self._xprobe = np.clip(xc + RHO * (base - xc), 0, 1)
+                self._phase = "contract"
+            return
+
+        if self._phase == "expand":
+            if value > self._fr:
+                self._simplex[-1] = (x, value)
+            else:
+                self._simplex[-1] = (self._xr, self._fr)
+            self._start_reflect()
+            return
+
+        if self._phase == "contract":
+            f_worst = self._simplex[-1][1]
+            if value > max(f_worst, self._fr if self._fr is not None else -np.inf):
+                self._simplex[-1] = (x, value)
+                self._start_reflect()
+            else:  # shrink toward best
+                self._order()
+                best = self._simplex[0][0]
+                self._shrink_queue = [
+                    np.clip(best + SIGMA * (xi - best), 0, 1)
+                    for xi, _ in self._simplex[1:]
+                ]
+                self._simplex = [self._simplex[0]]
+                self._phase = "shrink"
+                self._xprobe = self._shrink_queue.pop(0)
+            return
+
+        if self._phase == "shrink":
+            self._simplex.append((x, value))
+            if self._shrink_queue:
+                self._xprobe = self._shrink_queue.pop(0)
+            else:
+                self._start_reflect()
+            return
+
+    def _start_reflect(self):
+        self._order()
+        xc = self._centroid()
+        worst = self._simplex[-1][0]
+        self._xprobe = np.clip(xc + ALPHA * (xc - worst), 0, 1)
+        self._phase = "reflect"

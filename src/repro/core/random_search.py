@@ -1,0 +1,14 @@
+"""Random-search baseline (not in the paper's trio; sanity reference)."""
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.core.engine import Engine
+from repro.core.history import History
+
+
+class RandomSearch(Engine):
+    name = "random"
+
+    def suggest(self, history: History) -> Dict:
+        return self._unseen(history, self.space.sample(self.rng, 1)[0])

@@ -1,0 +1,107 @@
+"""Tuner orchestrator (paper Fig. 4).
+
+Algorithm-selection switch + iteration budget (paper: 50) + memoized
+objective + checkpoint/resume.  The objective maps a point (dict of
+backend-parameter values) to a throughput (higher is better); failures
+(OOM, compile error) surface as -inf and are recorded, mirroring how a
+real measurement harness handles a crashed configuration.
+"""
+from __future__ import annotations
+
+import math
+import pathlib
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Optional
+
+from repro.core.bayesopt import BayesOpt
+from repro.core.engine import Engine
+from repro.core.exhaustive import Exhaustive
+from repro.core.genetic import GeneticAlgorithm
+from repro.core.history import History
+from repro.core.neldermead import NelderMead
+from repro.core.random_search import RandomSearch
+from repro.core.space import SearchSpace
+
+ENGINES = {
+    "bo": BayesOpt,
+    "ga": GeneticAlgorithm,
+    "nms": NelderMead,
+    "random": RandomSearch,
+    "exhaustive": Exhaustive,
+}
+
+
+@dataclass
+class TunerConfig:
+    algorithm: str = "bo"
+    budget: int = 50  # paper: tuning iterations capped at 50
+    seed: int = 0
+    checkpoint_path: Optional[str] = None
+    engine_kwargs: dict = field(default_factory=dict)
+    verbose: bool = True
+
+
+class Tuner:
+    def __init__(
+        self,
+        objective: Callable[[Dict], float],
+        space: SearchSpace,
+        config: TunerConfig = TunerConfig(),
+    ):
+        self.objective = objective
+        self.space = space
+        self.config = config
+        if config.algorithm not in ENGINES:
+            raise ValueError(
+                f"unknown algorithm {config.algorithm!r}; one of {sorted(ENGINES)}"
+            )
+        self.engine: Engine = ENGINES[config.algorithm](
+            space, seed=config.seed, **config.engine_kwargs
+        )
+        self.history = History(space)
+        if config.checkpoint_path and pathlib.Path(config.checkpoint_path).exists():
+            self._resume(config.checkpoint_path)
+
+    def _resume(self, path: str) -> None:
+        """Fault tolerance: reload history + replay it into the engine."""
+        loaded = History.load(path, self.space)
+        for ev in loaded.evals:
+            self.history.add(ev.point, ev.value, ev.cost_seconds, ev.meta)
+            self.engine.observe(ev.point, ev.value)
+        if self.config.verbose and len(loaded):
+            print(f"[tuner] resumed {len(loaded)} evaluations from {path}")
+
+    def _evaluate(self, point: Dict) -> (float, float, dict):
+        cached = self.history.lookup(point)
+        if cached is not None:  # memoized repeat query (engines may revisit)
+            return cached.value, 0.0, {"memoized": True}
+        t0 = time.time()
+        try:
+            value = self.objective(point)
+            meta = {}
+            if isinstance(value, tuple):
+                value, meta = value
+            value = float(value)
+        except Exception as e:  # failed configuration = worst outcome
+            value, meta = -math.inf, {"error": repr(e)}
+        return value, time.time() - t0, meta
+
+    def run(self, budget: Optional[int] = None) -> History:
+        budget = budget if budget is not None else self.config.budget
+        while len(self.history) < budget:
+            point = self.engine.suggest(self.history)
+            value, secs, meta = self._evaluate(point)
+            self.engine.observe(point, value)
+            self.history.add(point, value, secs, meta)
+            if self.config.checkpoint_path:
+                self.history.save(self.config.checkpoint_path)
+            if self.config.verbose:
+                best = (self.history.best().value
+                        if any(math.isfinite(e.value) for e in self.history.evals)
+                        else float("nan"))
+                print(
+                    f"[tuner:{self.engine.name}] it={len(self.history):3d} "
+                    f"y={value:.4g} best={best:.4g} ({secs:.1f}s) {point}"
+                )
+        return self.history

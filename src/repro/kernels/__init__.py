@@ -1,0 +1,8 @@
+"""Pallas TPU kernels for the compute hot-spots, with pure-jnp oracles.
+
+Layout per kernel: ``<name>.py`` (pl.pallas_call + BlockSpec), ``ops.py``
+(jit'd wrapper + impl dispatch), ``ref.py`` (oracles).
+"""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,104 @@
+"""RWKV-6 wkv (gated-linear-attention) scan — Pallas TPU kernel.
+
+State ``S (dk, dv)`` per (batch, head) stays in VMEM scratch across the
+sequence chunks (innermost grid axis); the per-timestep recurrence is
+vectorized over the (dk, dv) state matrix on the VPU.
+
+    y_t = r_t @ (S + (u * k_t) ⊗ v_t)
+    S  <- diag(w_t) S + k_t ⊗ v_t
+
+Grid: ``(B*H, num_seq_chunks)``.  The chunked-quadratic (MXU/matmul) form
+lives in ref.gla_scan_chunked_ref and is the documented perf iteration for
+training shapes; this kernel is the exact, numerically-stable recurrence
+used for decode/prefill validation.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gla_kernel(
+    r_ref,  # (chunk, dk)
+    k_ref,  # (chunk, dk)
+    v_ref,  # (chunk, dv)
+    w_ref,  # (chunk, dk)
+    u_ref,  # (dk,)
+    y_ref,  # (chunk, dv)
+    s_scr,  # (dk, dv) f32
+    *,
+    chunk: int,
+):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_scr[...] = jnp.zeros_like(s_scr)
+
+    u = u_ref[...].astype(jnp.float32)
+
+    def body(t, _):
+        rt = r_ref[t, :].astype(jnp.float32)  # (dk,)
+        kt = k_ref[t, :].astype(jnp.float32)
+        vt = v_ref[t, :].astype(jnp.float32)  # (dv,)
+        wt = w_ref[t, :].astype(jnp.float32)
+        S = s_scr[...]
+        bonus = jnp.sum(rt * u * kt)
+        y = rt @ S + bonus * vt
+        s_scr[...] = wt[:, None] * S + kt[:, None] * vt[None, :]
+        y_ref[t, :] = y.astype(y_ref.dtype)
+        return 0
+
+    jax.lax.fori_loop(0, chunk, body, 0)
+
+
+def gla_scan(
+    r: jax.Array,  # (B, S, H, dk)
+    k: jax.Array,  # (B, S, H, dk)
+    v: jax.Array,  # (B, S, H, dv)
+    w: jax.Array,  # (B, S, H, dk) decay in (0, 1)
+    u: jax.Array,  # (H, dk)
+    *,
+    chunk: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Returns y (B, S, H, dv).  Zero initial state."""
+    B, S, H, dk = r.shape
+    dv = v.shape[-1]
+    chunk = min(chunk, S)
+    pad = (-S) % chunk
+
+    def fold(a, d):
+        a = jnp.moveaxis(a, 2, 1).reshape(B * H, S, d)
+        if pad:
+            a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)))
+        return a
+
+    rt, kt, wt = fold(r, dk), fold(k, dk), fold(w, dk)
+    vt = fold(v, dv)
+    Sp = rt.shape[1]
+    nc = Sp // chunk
+
+    def u_index(bh, ci):
+        return (bh % H, 0)
+
+    out = pl.pallas_call(
+        functools.partial(_gla_kernel, chunk=chunk),
+        grid=(B * H, nc),
+        in_specs=[
+            pl.BlockSpec((None, chunk, dk), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((None, chunk, dk), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((None, chunk, dv), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((None, chunk, dk), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((None, dk), u_index),
+        ],
+        out_specs=pl.BlockSpec((None, chunk, dv), lambda bh, ci: (bh, ci, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, Sp, dv), r.dtype),
+        scratch_shapes=[pltpu.VMEM((dk, dv), jnp.float32)],
+        interpret=interpret,
+    )(rt, kt, vt, wt, u)
+    return jnp.moveaxis(out[:, :S].reshape(B, H, S, dv), 1, 2)

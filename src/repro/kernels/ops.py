@@ -1,0 +1,197 @@
+"""Public kernel API: jit'd wrappers with implementation dispatch.
+
+``impl``:
+  * ``"ref"``    — pure-jnp oracle (differentiable; used on CPU and for the
+                   dry-run lowering).
+  * ``"pallas"`` — the Pallas TPU kernel.  On a CPU backend it runs in
+                   interpret mode automatically (correctness validation).
+  * ``"chunked"``— matmul-friendly chunked jnp form (scans only).
+
+Pallas forward passes get a ``jax.custom_vjp`` whose backward recomputes
+through the reference implementation — the standard remat-style pairing
+that keeps the training graph differentiable while the fwd hot-spot runs
+the hand-written kernel.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import decode_attention as _decode_mod
+from repro.kernels import flash_attention as _flash_mod
+from repro.kernels import gla_scan as _gla_mod
+from repro.kernels import rmsnorm as _rms_mod
+from repro.kernels import ssm_scan as _ssm_mod
+from repro.kernels import ref
+
+_VALID_IMPLS = ("ref", "pallas", "chunked")
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _ref_vjp(pallas_fn, ref_fn):
+    """custom_vjp: pallas forward, reference-recompute backward."""
+
+    @jax.custom_vjp
+    def fn(*args):
+        return pallas_fn(*args)
+
+    def fwd(*args):
+        return pallas_fn(*args), args
+
+    def bwd(args, g):
+        _, vjp = jax.vjp(ref_fn, *args)
+        return vjp(g)
+
+    fn.defvjp(fwd, bwd)
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+
+def attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+    impl: str = "ref",
+    block_q: int = 128,
+    block_kv: int = 128,
+    unroll: bool = False,
+    prune: bool = False,
+) -> jax.Array:
+    """(B,Sq,H,dh) x (B,Sk,K,dh) -> (B,Sq,H,dh)."""
+    assert impl in _VALID_IMPLS, impl
+    if impl == "ref":
+        return ref.attention_ref(q, k, v, causal=causal, window=window, scale=scale)
+    if impl == "chunked":
+        with jax.named_scope("krnl_flash_attn"):
+            return ref.attention_chunked_ref(
+                q, k, v, causal=causal, window=window, scale=scale,
+                block_q=block_q, unroll=unroll, prune=prune,
+            )
+
+    pallas_fn = functools.partial(
+        _flash_mod.flash_attention,
+        causal=causal,
+        window=window,
+        scale=scale,
+        block_q=block_q,
+        block_kv=block_kv,
+        interpret=_interpret(),
+    )
+    ref_fn = functools.partial(
+        ref.attention_ref, causal=causal, window=window, scale=scale
+    )
+    return _ref_vjp(pallas_fn, ref_fn)(q, k, v)
+
+
+def decode_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    lengths: jax.Array,
+    *,
+    scale: Optional[float] = None,
+    impl: str = "ref",
+    block_kv: int = 512,
+) -> jax.Array:
+    """(B,H,dh) x (B,Smax,K,dh) cache + (B,) lengths -> (B,H,dh)."""
+    assert impl in _VALID_IMPLS, impl
+    if impl in ("ref", "chunked"):
+        with jax.named_scope("krnl_decode_attn"):
+            return ref.decode_attention_ref(q, k, v, lengths, scale=scale)
+    return _decode_mod.decode_attention(
+        q, k, v, lengths, scale=scale, block_kv=block_kv, interpret=_interpret()
+    )
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(
+    x: jax.Array,
+    scale: jax.Array,
+    eps: float = 1e-5,
+    *,
+    impl: str = "ref",
+    block_rows: int = 256,
+) -> jax.Array:
+    assert impl in _VALID_IMPLS, impl
+    if impl in ("ref", "chunked"):
+        return ref.rmsnorm_ref(x, scale, eps)
+    pallas_fn = functools.partial(
+        _rms_mod.rmsnorm, eps=eps, block_rows=block_rows, interpret=_interpret()
+    )
+    ref_fn = functools.partial(ref.rmsnorm_ref, eps=eps)
+    return _ref_vjp(pallas_fn, ref_fn)(x, scale)
+
+
+# ---------------------------------------------------------------------------
+# Scans
+# ---------------------------------------------------------------------------
+
+
+def ssm_scan(
+    x: jax.Array,
+    dt: jax.Array,
+    A: jax.Array,
+    B_in: jax.Array,
+    C_in: jax.Array,
+    D_skip: jax.Array,
+    *,
+    impl: str = "chunked",
+    chunk: int = 128,
+    block_d: int = 256,
+) -> jax.Array:
+    """Selective scan, zero init state.  Returns y (B,S,D)."""
+    assert impl in _VALID_IMPLS, impl
+    if impl == "ref":
+        return ref.ssm_scan_ref(x, dt, A, B_in, C_in, D_skip)[0]
+    if impl == "chunked":
+        with jax.named_scope("krnl_ssm_scan"):
+            return ref.ssm_scan_chunked_ref(
+                x, dt, A, B_in, C_in, D_skip, chunk=chunk
+            )[0]
+    pallas_fn = functools.partial(
+        _ssm_mod.ssm_scan, chunk=chunk, block_d=block_d, interpret=_interpret()
+    )
+    ref_fn = lambda *a: ref.ssm_scan_chunked_ref(*a, chunk=chunk)[0]
+    return _ref_vjp(pallas_fn, ref_fn)(x, dt, A, B_in, C_in, D_skip)
+
+
+def gla_scan(
+    r: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    w: jax.Array,
+    u: jax.Array,
+    *,
+    impl: str = "chunked",
+    chunk: int = 64,
+) -> jax.Array:
+    """RWKV-6 wkv scan, zero init state.  Returns y (B,S,H,dv)."""
+    assert impl in _VALID_IMPLS, impl
+    if impl == "ref":
+        return ref.gla_scan_ref(r, k, v, w, u)[0]
+    if impl == "chunked":
+        with jax.named_scope("krnl_gla_scan"):
+            return ref.gla_scan_chunked_ref(r, k, v, w, u, chunk=chunk)[0]
+    pallas_fn = functools.partial(
+        _gla_mod.gla_scan, chunk=chunk, interpret=_interpret()
+    )
+    ref_fn = lambda *a: ref.gla_scan_chunked_ref(*a, chunk=chunk)[0]
+    return _ref_vjp(pallas_fn, ref_fn)(r, k, v, w, u)

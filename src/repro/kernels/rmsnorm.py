@@ -1,0 +1,51 @@
+"""Fused RMSNorm — Pallas TPU kernel.
+
+Row-tiled: grid over row blocks, each block computes fp32 mean-square and
+applies the scale in one VMEM pass (fuses what XLA emits as 4+ HBM
+round-trips at small sizes).  The feature dimension stays whole in VMEM —
+valid for every assigned arch (d_model <= 8192 => <= 32 KiB/row fp32).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rmsnorm_kernel(x_ref, s_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    o_ref[...] = (y * s_ref[...].astype(jnp.float32)[None, :]).astype(o_ref.dtype)
+
+
+def rmsnorm(
+    x: jax.Array,  # (..., D)
+    scale: jax.Array,  # (D,)
+    eps: float = 1e-5,
+    *,
+    block_rows: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    orig_shape = x.shape
+    D = x.shape[-1]
+    xr = x.reshape(-1, D)
+    R = xr.shape[0]
+    block_rows = min(block_rows, R)
+    pad = (-R) % block_rows
+    if pad:
+        xr = jnp.pad(xr, ((0, pad), (0, 0)))
+    out = pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=(xr.shape[0] // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, D), lambda i: (i, 0)),
+            pl.BlockSpec((D,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, D), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(xr.shape, x.dtype),
+        interpret=interpret,
+    )(xr, scale)
+    return out[:R].reshape(orig_shape)

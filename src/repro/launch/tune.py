@@ -1,0 +1,66 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+# ^ the roofline objective compiles against the production mesh.
+
+"""The paper's tuning framework applied to this framework's own backend.
+
+    PYTHONPATH=src python -m repro.launch.tune --arch qwen3-moe-30b-a3b \
+        --shape train_4k --algo bo --budget 50 --out artifacts/tune_moe.json
+
+Each evaluation lowers+compiles the (arch x shape) cell on the production
+mesh with the candidate BackendConfig and returns roofline throughput;
+OOM configurations fail (-inf) like crashed measurements in the paper.
+This driver is also the §Perf hillclimbing engine.
+"""
+import argparse
+import json
+import pathlib
+
+from repro.configs import get_config
+from repro.core import SearchSpace, Tuner, TunerConfig
+from repro.tuning.evaluator import RooflineEvaluator
+from repro.tuning.parameters import BASELINE, backend_space, config_from_point
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--algo", default="bo", choices=["bo", "ga", "nms", "random"])
+    ap.add_argument("--budget", type=int, default=50)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--cache", default=None,
+                    help="JSON cache of compiled evaluations (shared across algos)")
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    shape_kind = "train" if args.shape.startswith("train") else "serve"
+    space = SearchSpace.from_dicts(backend_space(cfg, kind=shape_kind))
+    print(f"[tune] space: {space.names} (grid {space.grid_size():,})")
+
+    evaluator = RooflineEvaluator(
+        args.arch, args.shape, multi_pod=args.multi_pod, cache_path=args.cache
+    )
+    ckpt = (args.out + ".ckpt") if args.out else None
+    tuner = Tuner(
+        evaluator, space,
+        TunerConfig(algorithm=args.algo, budget=args.budget, seed=args.seed,
+                    checkpoint_path=ckpt),
+    )
+    history = tuner.run()
+    best = history.best()
+    print(f"[tune] best throughput {best.value:.4g} tok/s at {best.point}")
+    print(f"[tune] backend config: {config_from_point(best.point, BASELINE)}")
+    print(f"[tune] sampled-range coverage: {history.sampled_range_fraction()}")
+    if args.out:
+        out = pathlib.Path(args.out)
+        out.parent.mkdir(parents=True, exist_ok=True)
+        out.write_text(history.to_json())
+        print(f"[tune] wrote {out}")
+    return history
+
+
+if __name__ == "__main__":
+    main()

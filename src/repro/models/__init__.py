@@ -1,0 +1,4 @@
+from repro.models.model import Model, build_model
+from repro.models.runtime import CPU_TEST, Runtime
+
+__all__ = ["Model", "build_model", "Runtime", "CPU_TEST"]

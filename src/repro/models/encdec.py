@@ -1,0 +1,238 @@
+"""Encoder-decoder transformer (Whisper-style) with stubbed conv frontend.
+
+The audio frontend is a STUB per the assignment: ``input_specs`` provides
+precomputed mel-frame embeddings ``encoder_embeds (B, T_enc, D)``.
+LayerNorm + GELU + biased attention projections per Whisper; positional
+encoding is sinusoidal for both stacks (Whisper's decoder table is learned
+and capped at 448 positions — sinusoids let the framework exercise the
+assigned 32k/500k decode shapes; deviation recorded in DESIGN.md).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops
+from repro.models import layers as L
+from repro.models.params import P, dense_init, stack_layer_params, zeros_init
+from repro.models.lm import _scan_periods
+from repro.models.runtime import Runtime
+
+
+def sinusoids(length: int, channels: int) -> np.ndarray:
+    assert channels % 2 == 0
+    log_timescale = np.log(10_000.0) / (channels // 2 - 1)
+    inv = np.exp(-log_timescale * np.arange(channels // 2))
+    t = np.arange(length)[:, None] * inv[None, :]
+    return np.concatenate([np.sin(t), np.cos(t)], axis=1).astype(np.float32)
+
+
+def _pos_enc(positions: jax.Array, channels: int) -> jax.Array:
+    half = channels // 2
+    log_timescale = np.log(10_000.0) / (half - 1)
+    inv = jnp.exp(-log_timescale * jnp.arange(half))
+    t = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.concatenate([jnp.sin(t), jnp.cos(t)], axis=-1)
+
+
+def _init_enc_block(key, cfg: ModelConfig) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "norm1": L.init_layernorm(cfg.d_model),
+        "attn": L.init_attention(k1, cfg),
+        "norm2": L.init_layernorm(cfg.d_model),
+        "mlp": L.init_mlp(k2, cfg),
+    }
+
+
+def _init_dec_block(key, cfg: ModelConfig) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "norm1": L.init_layernorm(cfg.d_model),
+        "self_attn": L.init_attention(k1, cfg),
+        "norm_c": L.init_layernorm(cfg.d_model),
+        "cross_attn": L.init_attention(k2, cfg),
+        "norm2": L.init_layernorm(cfg.d_model),
+        "mlp": L.init_mlp(k3, cfg),
+    }
+
+
+def init_encdec(key, cfg: ModelConfig) -> dict:
+    keys = jax.random.split(key, 2 + cfg.encoder_layers + cfg.num_layers)
+    params = {
+        "embed": dense_init(keys[0], (cfg.padded_vocab, cfg.d_model),
+                            ("vocab", "embed"), fan_in=cfg.d_model),
+        "enc_blocks": stack_layer_params(
+            [_init_enc_block(keys[2 + i], cfg) for i in range(cfg.encoder_layers)]
+        ),
+        "enc_norm": L.init_layernorm(cfg.d_model),
+        "dec_blocks": stack_layer_params(
+            [_init_dec_block(keys[2 + cfg.encoder_layers + i], cfg)
+             for i in range(cfg.num_layers)]
+        ),
+        "final_norm": L.init_layernorm(cfg.d_model),
+    }
+    return params
+
+
+def encode(params, encoder_embeds: jax.Array, *, cfg: ModelConfig, rt: Runtime):
+    """encoder_embeds (B, T_enc, D) — stub frontend output."""
+    B, T, D = encoder_embeds.shape
+    x = encoder_embeds.astype(rt.dtype()) + _pos_enc(jnp.arange(T), D).astype(rt.dtype())
+
+    def block_fn(x, blk):
+        h, _ = L.attention_apply(
+            blk["attn"], L.layernorm(blk["norm1"], x, cfg.norm_eps),
+            cfg=cfg, rt=rt, mode="full", use_rope=False, causal=False,
+        )
+        x = x + h
+        x = x + L.mlp_apply(blk["mlp"], L.layernorm(blk["norm2"], x, cfg.norm_eps),
+                            cfg=cfg, rt=rt)
+        return x, None
+
+    x, _ = _scan_periods(block_fn, x, params["enc_blocks"], rt)
+    return L.layernorm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def _cross_kv(blk, enc_out, rt):
+    k = jnp.einsum("btd,dhk->bthk", enc_out.astype(rt.dtype()),
+                   blk["cross_attn"]["wk"].astype(rt.dtype()))
+    v = jnp.einsum("btd,dhk->bthk", enc_out.astype(rt.dtype()),
+                   blk["cross_attn"]["wv"].astype(rt.dtype()))
+    if "bk" in blk["cross_attn"]:
+        k = k + blk["cross_attn"]["bk"].astype(k.dtype)
+        v = v + blk["cross_attn"]["bv"].astype(v.dtype)
+    return k, v
+
+
+def _cross_attend(blk, x, k, v, *, cfg, rt, mode):
+    p = blk["cross_attn"]
+    q = jnp.einsum("bsd,dhk->bshk", x.astype(rt.dtype()), p["wq"].astype(rt.dtype()))
+    if "bq" in p:
+        q = q + p["bq"].astype(q.dtype)
+    if mode == "decode":
+        lengths = jnp.full((x.shape[0],), k.shape[1], jnp.int32)
+        out = ops.decode_attention(q[:, 0], k.astype(rt.dtype()),
+                                   v.astype(rt.dtype()), lengths,
+                                   impl=rt.attn_impl, block_kv=rt.block_kv)[:, None]
+    else:
+        out = ops.attention(q, k.astype(rt.dtype()), v.astype(rt.dtype()),
+                            causal=False, impl=rt.attn_impl,
+                            block_q=rt.block_q, block_kv=rt.block_kv,
+                            unroll=rt.unroll_layers)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(rt.dtype())).astype(x.dtype)
+
+
+def forward(
+    params,
+    tokens: jax.Array,  # (B, S) decoder tokens
+    encoder_embeds: jax.Array,  # (B, T_enc, D)
+    *,
+    cfg: ModelConfig,
+    rt: Runtime,
+    mode: str = "full",  # full | prefill
+    cache: Optional[dict] = None,
+) -> Tuple[jax.Array, jax.Array, Optional[dict]]:
+    B, S = tokens.shape
+    D = cfg.d_model
+    enc_out = encode(params, encoder_embeds, cfg=cfg, rt=rt)
+
+    x = jnp.take(params["embed"], tokens, axis=0).astype(rt.dtype())
+    x = x + _pos_enc(jnp.arange(S), D).astype(x.dtype)
+
+    def block_fn(carry, xs):
+        x = carry
+        blk, cache_slice = xs
+        h, kv = L.attention_apply(
+            blk["self_attn"], L.layernorm(blk["norm1"], x, cfg.norm_eps),
+            cfg=cfg, rt=rt,
+            mode=("prefill" if mode == "prefill" else "full"),
+            cache=(cache_slice["self"] if cache_slice else None),
+            use_rope=False, causal=True,
+        )
+        x = x + h
+        ck, cv = _cross_kv(blk, enc_out, rt)
+        x = x + _cross_attend(blk, L.layernorm(blk["norm_c"], x, cfg.norm_eps),
+                              ck, cv, cfg=cfg, rt=rt, mode="full")
+        x = x + L.mlp_apply(blk["mlp"], L.layernorm(blk["norm2"], x, cfg.norm_eps),
+                            cfg=cfg, rt=rt)
+        new_cache = None
+        if mode == "prefill":
+            new_cache = {
+                "self": kv,
+                "cross": {"k": ck.astype(jnp.bfloat16), "v": cv.astype(jnp.bfloat16)},
+            }
+        return x, new_cache
+
+    cache_layers = cache["layers"] if cache is not None else None
+    x, new_layer_caches = _scan_periods(
+        block_fn, x, (params["dec_blocks"], cache_layers), rt
+    )
+
+    new_cache = None
+    if mode == "prefill":
+        new_cache = {"pos": jnp.asarray(S, jnp.int32), "layers": new_layer_caches}
+        x = x[:, -1:]
+    x = L.layernorm(params["final_norm"], x, cfg.norm_eps)
+    logits = x.astype(rt.dtype()) @ params["embed"].T.astype(rt.dtype())
+    return logits, jnp.zeros((), jnp.float32), new_cache
+
+
+def decode_step(
+    params, tokens: jax.Array, cache: dict, *, cfg: ModelConfig, rt: Runtime
+) -> Tuple[jax.Array, dict]:
+    pos = cache["pos"]
+    B = tokens.shape[0]
+    D = cfg.d_model
+    x = jnp.take(params["embed"], tokens, axis=0).astype(rt.dtype())
+    x = x + _pos_enc(jnp.full((B, 1), pos), D).astype(x.dtype)
+
+    def block_fn(carry, xs):
+        x = carry
+        blk, cache_slice = xs
+        h, kv = L.attention_apply(
+            blk["self_attn"], L.layernorm(blk["norm1"], x, cfg.norm_eps),
+            cfg=cfg, rt=rt, mode="decode", cache=cache_slice["self"], pos=pos,
+            use_rope=False, causal=True,
+        )
+        x = x + h
+        x = x + _cross_attend(
+            blk, L.layernorm(blk["norm_c"], x, cfg.norm_eps),
+            cache_slice["cross"]["k"], cache_slice["cross"]["v"],
+            cfg=cfg, rt=rt, mode="decode",
+        )
+        x = x + L.mlp_apply(blk["mlp"], L.layernorm(blk["norm2"], x, cfg.norm_eps),
+                            cfg=cfg, rt=rt)
+        return x, {"self": kv, "cross": cache_slice["cross"]}
+
+    x, new_layer_caches = _scan_periods(
+        block_fn, x, (params["dec_blocks"], cache["layers"]), rt
+    )
+    x = L.layernorm(params["final_norm"], x, cfg.norm_eps)
+    logits = x.astype(rt.dtype()) @ params["embed"].T.astype(rt.dtype())
+    return logits, {"pos": pos + 1, "layers": new_layer_caches}
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int) -> dict:
+    h, dh = cfg.num_heads, cfg.resolved_head_dim
+    per = []
+    for _ in range(cfg.num_layers):
+        per.append({
+            "self": L.init_attention_cache(cfg, batch, cache_len),
+            "cross": {
+                "k": zeros_init((batch, cfg.encoder_seq_len, h, dh),
+                                ("batch", "cache_seq", "heads", "head"),
+                                dtype=jnp.bfloat16),
+                "v": zeros_init((batch, cfg.encoder_seq_len, h, dh),
+                                ("batch", "cache_seq", "heads", "head"),
+                                dtype=jnp.bfloat16),
+            },
+        })
+    return {
+        "pos": P(jnp.zeros((), jnp.int32), ()),
+        "layers": stack_layer_params(per),
+    }

@@ -1,0 +1,293 @@
+"""Unified decoder-only LM covering dense / MoE / hybrid / SSM / VLM families.
+
+Layer stacks are applied with ``lax.scan`` over the *repeating period* of
+the layer plan (configs/base.py:layer_period): per-period-position
+parameters are stacked along a leading ``layers`` dim, so compile time is
+depth-independent (62-layer models lower the same HLO as 2-layer ones, just
+with a longer scan trip count).
+
+Three entry points: ``forward`` (train / prefill), ``decode_step`` and
+``init_cache`` — the KV/recurrent-state cache is itself a P-pytree so the
+launcher can shard it (seq over "model", batch over "data"/"pod").
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.ad_checkpoint import checkpoint_name
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import shard_hint
+from repro.models import layers as L
+from repro.models.params import P, dense_init, split_params, stack_layer_params
+from repro.models.runtime import Runtime
+
+MIXER_INIT = {
+    "attn": L.init_attention,
+    "mla": L.init_mla,
+    "mamba": L.init_mamba,
+    "rwkv": L.init_rwkv_tmix,
+}
+
+
+def _scan_periods(period_fn, carry, xs, rt: Runtime):
+    """lax.scan over stacked periods, or a python loop when
+    rt.unroll_layers (exact HloCostAnalysis for the roofline pipeline)."""
+    if not rt.unroll_layers:
+        return jax.lax.scan(period_fn, carry, xs)
+    n = jax.tree_util.tree_leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(n):
+        xs_i = jax.tree_util.tree_map(lambda a: a[i], xs)
+        carry, y = period_fn(carry, xs_i)
+        ys.append(y)
+    if all(y is None for y in jax.tree_util.tree_leaves(ys, is_leaf=lambda v: v is None)):
+        return carry, None
+    stacked = jax.tree_util.tree_map(lambda *zs: jnp.stack(zs), *ys)
+    return carry, stacked
+
+
+def _init_block(key, cfg: ModelConfig, mixer_kind: str, mlp_kind: str) -> dict:
+    k1, k2 = jax.random.split(key)
+    block = {
+        "norm1": L.init_rmsnorm(cfg.d_model),
+        "mixer": MIXER_INIT[mixer_kind](k1, cfg),
+        "norm2": L.init_rmsnorm(cfg.d_model),
+    }
+    if cfg.rwkv is not None:
+        block["mlp"] = L.init_rwkv_cmix(k2, cfg)
+    elif mlp_kind == "moe":
+        block["mlp"] = L.init_moe(k2, cfg)
+    else:
+        block["mlp"] = L.init_mlp(k2, cfg)
+    return block
+
+
+def init_lm(key, cfg: ModelConfig) -> dict:
+    """Returns a P-pytree (values + logical axes)."""
+    plan = cfg.layer_plan()
+    period = cfg.layer_period()
+    n_periods = cfg.num_layers // period
+    keys = jax.random.split(key, 3 + cfg.num_layers)
+
+    params = {
+        "embed": dense_init(keys[0], (cfg.padded_vocab, cfg.d_model),
+                            ("vocab", "embed"), fan_in=cfg.d_model),
+        "final_norm": L.init_rmsnorm(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = dense_init(keys[1], (cfg.d_model, cfg.padded_vocab),
+                                    ("embed", "vocab"), fan_in=cfg.d_model)
+
+    blocks = {}
+    for pos in range(period):
+        mixer_kind, mlp_kind = plan[pos]
+        per_period = [
+            _init_block(keys[3 + per * period + pos], cfg, mixer_kind, mlp_kind)
+            for per in range(n_periods)
+        ]
+        blocks[f"pos{pos}"] = stack_layer_params(per_period)
+    params["blocks"] = blocks
+    return params
+
+
+def _block_apply(
+    block, x, *, cfg: ModelConfig, rt: Runtime, mixer_kind: str, mlp_kind: str,
+    mode: str, cache: Optional[dict], pos: Optional[jax.Array],
+) -> Tuple[jax.Array, jax.Array, Optional[dict]]:
+    """Pre-norm residual block.  Returns (x, aux_loss, new_cache)."""
+    use_rope = cfg.attn_period == 0  # hybrids (jamba) carry no explicit PE
+    h = L.rmsnorm(block["norm1"], x, cfg.norm_eps, rt)
+    mixer_cache = cache.get("mixer") if cache else None
+    new_cache = {}
+    if mixer_kind == "attn":
+        h, mc = L.attention_apply(block["mixer"], h, cfg=cfg, rt=rt, mode=mode,
+                                  cache=mixer_cache, pos=pos, use_rope=use_rope)
+    elif mixer_kind == "mla":
+        h, mc = L.mla_apply(block["mixer"], h, cfg=cfg, rt=rt, mode=mode,
+                            cache=mixer_cache, pos=pos)
+    elif mixer_kind == "mamba":
+        h, mc = L.mamba_apply(block["mixer"], h, cfg=cfg, rt=rt, mode=mode,
+                              cache=mixer_cache, pos=pos)
+    elif mixer_kind == "rwkv":
+        h, mc = L.rwkv_tmix_apply(block["mixer"], h, cfg=cfg, rt=rt, mode=mode,
+                                  cache=mixer_cache)
+    else:
+        raise ValueError(mixer_kind)
+    h = checkpoint_name(h, "mixer_out")
+    x = x + h
+    if mc is not None:
+        new_cache["mixer"] = mc
+
+    h = L.rmsnorm(block["norm2"], x, cfg.norm_eps, rt)
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.rwkv is not None:
+        mlp_cache = cache.get("mlp") if cache else None
+        h, cc = L.rwkv_cmix_apply(block["mlp"], h, cfg=cfg, rt=rt, mode=mode,
+                                  cache=mlp_cache)
+        if cc is not None:
+            new_cache["mlp"] = cc
+    elif mlp_kind == "moe":
+        h, aux = L.moe_apply(block["mlp"], h, cfg=cfg, rt=rt)
+    else:
+        h = L.mlp_apply(block["mlp"], h, cfg=cfg, rt=rt)
+    x = x + checkpoint_name(h, "mlp_out")
+    return x, aux, (new_cache or None)
+
+
+def _embed(params, tokens, cfg, rt, image_embeds=None):
+    x = jnp.take(params["embed"], tokens, axis=0).astype(rt.dtype())
+    if image_embeds is not None:
+        n = image_embeds.shape[1]
+        x = jnp.concatenate(
+            [image_embeds.astype(x.dtype), x[:, n:]], axis=1
+        )
+    return shard_hint(x, ("batch", None, "embed_act"))
+
+
+def _head(params, x, cfg, rt):
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps, rt)
+    w = params.get("head")
+    if w is None:
+        w = params["embed"].T
+    logits = x.astype(rt.dtype()) @ w.astype(rt.dtype())
+    return shard_hint(logits, ("batch", None, "vocab"))
+
+
+def forward(
+    params,
+    tokens: jax.Array,  # (B, S) int32
+    *,
+    cfg: ModelConfig,
+    rt: Runtime,
+    mode: str = "full",  # full | prefill
+    cache: Optional[dict] = None,
+    image_embeds: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, jax.Array, Optional[dict]]:
+    """Returns (logits, aux_loss, new_cache).
+
+    mode="full":    logits for every position (training).
+    mode="prefill": logits for the LAST position only + populated cache.
+    """
+    plan = cfg.layer_plan()
+    period = cfg.layer_period()
+    x = _embed(params, tokens, cfg, rt, image_embeds)
+
+    def period_fn(carry, xs):
+        x, aux = carry
+        blocks_slice, cache_slice = xs
+        new_cache_slice = {}
+        for pos_i in range(period):
+            mixer_kind, mlp_kind = plan[pos_i]
+            key = f"pos{pos_i}"
+            c = cache_slice.get(key) if cache_slice else None
+            x, aux_i, nc = _block_apply(
+                blocks_slice[key], x, cfg=cfg, rt=rt,
+                mixer_kind=mixer_kind, mlp_kind=mlp_kind,
+                mode=mode, cache=c, pos=None,
+            )
+            aux = aux + aux_i
+            if nc is not None:
+                new_cache_slice[key] = nc
+        return (x, aux), new_cache_slice
+
+    if rt.remat == "full":
+        period_fn = jax.checkpoint(period_fn, prevent_cse=False)
+    elif rt.remat == "dots":
+        period_fn = jax.checkpoint(
+            period_fn, policy=jax.checkpoint_policies.dots_saveable,
+            prevent_cse=False,
+        )
+    elif rt.remat == "names":
+        period_fn = jax.checkpoint(
+            period_fn,
+            policy=jax.checkpoint_policies.save_only_these_names(
+                "mixer_out", "mlp_out"
+            ),
+            prevent_cse=False,
+        )
+
+    cache_layers = cache["layers"] if cache is not None else None
+    (x, aux), new_layer_caches = _scan_periods(
+        period_fn, (x, jnp.zeros((), jnp.float32)),
+        (params["blocks"], cache_layers), rt,
+    )
+
+    new_cache = None
+    if mode == "prefill":
+        S = tokens.shape[1]
+        new_cache = {"pos": jnp.asarray(S, jnp.int32), "layers": new_layer_caches}
+        x = x[:, -1:]  # only last-position logits for prefill
+    logits = _head(params, x, cfg, rt)
+    return logits, aux, new_cache
+
+
+def decode_step(
+    params,
+    tokens: jax.Array,  # (B, 1) int32
+    cache: dict,
+    *,
+    cfg: ModelConfig,
+    rt: Runtime,
+) -> Tuple[jax.Array, dict]:
+    """One decode token for the whole batch.  Returns (logits (B,1,V), cache)."""
+    plan = cfg.layer_plan()
+    period = cfg.layer_period()
+    pos = cache["pos"]
+    x = _embed(params, tokens, cfg, rt)
+
+    def period_fn(carry, xs):
+        x = carry
+        blocks_slice, cache_slice = xs
+        new_cache_slice = {}
+        for pos_i in range(period):
+            mixer_kind, mlp_kind = plan[pos_i]
+            key = f"pos{pos_i}"
+            x, _, nc = _block_apply(
+                blocks_slice[key], x, cfg=cfg, rt=rt,
+                mixer_kind=mixer_kind, mlp_kind=mlp_kind,
+                mode="decode", cache=cache_slice[key], pos=pos,
+            )
+            new_cache_slice[key] = nc
+        return x, new_cache_slice
+
+    x, new_layer_caches = _scan_periods(
+        period_fn, x, (params["blocks"], cache["layers"]), rt
+    )
+    logits = _head(params, x, cfg, rt)
+    return logits, {"pos": pos + 1, "layers": new_layer_caches}
+
+
+# ---------------------------------------------------------------------------
+# Cache construction (P-pytree: shardable like params)
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int) -> dict:
+    plan = cfg.layer_plan()
+    period = cfg.layer_period()
+    n_periods = cfg.num_layers // period
+
+    def cache_for(mixer_kind):
+        c = {}
+        if mixer_kind == "attn":
+            c["mixer"] = L.init_attention_cache(cfg, batch, cache_len)
+        elif mixer_kind == "mla":
+            c["mixer"] = L.init_mla_cache(cfg, batch, cache_len)
+        elif mixer_kind == "mamba":
+            c["mixer"] = L.init_mamba_cache(cfg, batch)
+        elif mixer_kind == "rwkv":
+            rc = L.init_rwkv_cache(cfg, batch)
+            c["mixer"] = {"x_tmix": rc["x_tmix"], "S": rc["S"]}
+            c["mlp"] = {"x_cmix": rc["x_cmix"]}
+        return c
+
+    layer_caches = {}
+    for pos_i in range(period):
+        mixer_kind, _ = plan[pos_i]
+        per = [cache_for(mixer_kind) for _ in range(n_periods)]
+        layer_caches[f"pos{pos_i}"] = stack_layer_params(per)
+    return {"pos": P(jnp.zeros((), jnp.int32), ()), "layers": layer_caches}

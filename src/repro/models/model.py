@@ -1,0 +1,110 @@
+"""Model facade: one object per architecture config.
+
+Wraps the family-specific init/apply/cache functions behind a uniform
+interface used by the trainer, server, dry-run, benchmarks and tuner:
+
+    model = build_model(get_config("qwen2-0.5b"))
+    params = model.init(key)                      # P-pytree
+    logits, aux, _ = model.apply(values, batch, rt=rt)
+    cache = model.init_cache(batch=8, cache_len=1024)
+    logits, cache = model.decode_step(values, tok, cache_values, rt=rt)
+
+``input_specs(shape)`` returns ShapeDtypeStruct stand-ins + logical axes
+for every model input — the dry-run lowers against these without
+allocating anything.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import encdec, lm
+from repro.models.runtime import Runtime
+
+
+@dataclass(frozen=True)
+class InputSpec:
+    struct: jax.ShapeDtypeStruct
+    logical_axes: Tuple[Optional[str], ...]
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.is_encdec = cfg.encoder_layers > 0
+
+    # -- params / cache -----------------------------------------------------
+    def init(self, key) -> dict:
+        if self.is_encdec:
+            return encdec.init_encdec(key, self.cfg)
+        return lm.init_lm(key, self.cfg)
+
+    def init_cache(self, batch: int, cache_len: int) -> dict:
+        if self.is_encdec:
+            return encdec.init_cache(self.cfg, batch, cache_len)
+        return lm.init_cache(self.cfg, batch, cache_len)
+
+    # -- compute ------------------------------------------------------------
+    def apply(
+        self,
+        params,
+        batch: Dict[str, jax.Array],
+        *,
+        rt: Runtime,
+        mode: str = "full",
+        cache: Optional[dict] = None,
+    ):
+        """Returns (logits, aux_loss, new_cache)."""
+        if self.is_encdec:
+            return encdec.forward(
+                params, batch["tokens"], batch["encoder_embeds"],
+                cfg=self.cfg, rt=rt, mode=mode, cache=cache,
+            )
+        return lm.forward(
+            params, batch["tokens"], cfg=self.cfg, rt=rt, mode=mode,
+            cache=cache, image_embeds=batch.get("image_embeds"),
+        )
+
+    def decode_step(self, params, tokens, cache, *, rt: Runtime):
+        if self.is_encdec:
+            return encdec.decode_step(params, tokens, cache, cfg=self.cfg, rt=rt)
+        return lm.decode_step(params, tokens, cache, cfg=self.cfg, rt=rt)
+
+    # -- shape stand-ins ----------------------------------------------------
+    def input_specs(self, shape: ShapeConfig) -> Dict[str, InputSpec]:
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        specs: Dict[str, InputSpec] = {}
+        if shape.kind == "decode":
+            specs["tokens"] = InputSpec(
+                jax.ShapeDtypeStruct((B, 1), jnp.int32), ("batch", None)
+            )
+        else:
+            specs["tokens"] = InputSpec(
+                jax.ShapeDtypeStruct((B, S), jnp.int32), ("batch", None)
+            )
+        if shape.kind == "train":
+            specs["targets"] = InputSpec(
+                jax.ShapeDtypeStruct((B, S), jnp.int32), ("batch", None)
+            )
+        if cfg.family == "vlm" and shape.kind != "decode":
+            specs["image_embeds"] = InputSpec(
+                jax.ShapeDtypeStruct((B, cfg.num_frontend_tokens, cfg.d_model),
+                                     jnp.bfloat16),
+                ("batch", None, None),
+            )
+        if self.is_encdec and shape.kind != "decode":
+            specs["encoder_embeds"] = InputSpec(
+                jax.ShapeDtypeStruct((B, cfg.encoder_seq_len, cfg.d_model),
+                                     jnp.bfloat16),
+                ("batch", None, None),
+            )
+        return specs
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

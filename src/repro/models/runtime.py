@@ -1,0 +1,50 @@
+"""Runtime (backend) knobs — the tunable surface of the framework.
+
+These are the JAX/TPU analogues of the paper's TensorFlow threading-model
+parameters (DESIGN.md §2).  ``Runtime`` is a frozen dataclass so it is
+hashable and can be a static argument of jitted steps; the tuner mutates it
+via ``dataclasses.replace``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+
+_DTYPES = {"bf16": jnp.bfloat16, "f32": jnp.float32}
+
+
+@dataclass(frozen=True)
+class Runtime:
+    # kernel implementation + tile sizes (KMP_BLOCKTIME analogue)
+    attn_impl: str = "ref"  # ref | pallas
+    scan_impl: str = "chunked"  # ref | chunked | pallas
+    block_q: int = 512
+    block_kv: int = 512
+    scan_chunk: int = 128
+
+    # memory/recompute policy
+    remat: str = "none"  # none | dots | full
+
+    # numerics
+    compute_dtype: str = "bf16"  # bf16 | f32
+
+    # MoE
+    moe_capacity_factor: float = 0.0  # 0 => use config value
+    moe_groups: int = 0  # 0 => one group per sequence
+    moe_impl: str = "gspmd"  # gspmd (baseline) | ep_local (shard_map EP)
+
+    # causal tile pruning (the Pallas kernel's masked-tile skip, modeled at
+    # the HLO level in the unrolled cost path) — a beyond-paper optimization
+    attn_prune: bool = False
+
+    # dry-run cost extraction: python-loop over periods instead of lax.scan
+    # (XLA's HloCostAnalysis counts while bodies once; the roofline pipeline
+    # compiles unrolled 1- and 2-period variants and extrapolates).
+    unroll_layers: bool = False
+
+    def dtype(self):
+        return _DTYPES[self.compute_dtype]
+
+
+CPU_TEST = Runtime(compute_dtype="f32", scan_chunk=16, block_q=64, block_kv=64)

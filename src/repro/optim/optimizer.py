@@ -1,0 +1,149 @@
+"""Optimizers (pure-JAX pytrees): AdamW with large-scale memory options.
+
+* ``state_dtype="f32"``   — standard AdamW (fp32 m, v).
+* ``state_dtype="bf16"``  — m, v stored bf16 (halves optimizer HBM; the
+  update math still runs fp32).  Used for the 314B-param grok cell.
+* ``factored=True``       — Adafactor-style factored second moment for
+  rank>=2 params (row/col means instead of full v): O(n+m) not O(nm).
+
+Optimizer state inherits parameter sharding (ZeRO-1 for free under pjit:
+m/v shard exactly like their parameter).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptimizerConfig:
+    learning_rate: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    state_dtype: str = "f32"  # f32 | bf16
+    factored: bool = False
+
+
+def lr_schedule(cfg: OptimizerConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup + cosine decay to min_lr_ratio."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip(
+        (step - cfg.warmup_steps) / max(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0, 1.0,
+    )
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    decay = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos
+    return cfg.learning_rate * warm * decay
+
+
+def _state_dt(cfg: OptimizerConfig):
+    return jnp.bfloat16 if cfg.state_dtype == "bf16" else jnp.float32
+
+
+def _is_factorable(p: jax.Array) -> bool:
+    return p.ndim >= 2 and p.shape[-1] >= 8 and p.shape[-2] >= 8
+
+
+def adamw_init(params, cfg: OptimizerConfig) -> dict:
+    sdt = _state_dt(cfg)
+
+    def make_m(p):
+        return jnp.zeros_like(p, dtype=sdt)
+
+    def make_v(p):
+        if cfg.factored and _is_factorable(p):
+            return {
+                "row": jnp.zeros(p.shape[:-1], jnp.float32),
+                "col": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+            }
+        return jnp.zeros_like(p, dtype=sdt)
+
+    return {
+        "m": jax.tree_util.tree_map(make_m, params),
+        "v": jax.tree_util.tree_map(make_v, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree_util.tree_leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def adamw_update(
+    grads, state: dict, params, cfg: OptimizerConfig
+) -> Tuple[dict, dict, dict]:
+    """Returns (new_params, new_state, metrics)."""
+    count = state["count"] + 1
+    lr = lr_schedule(cfg, count)
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+    sdt = _state_dt(cfg)
+    b1, b2 = cfg.beta1, cfg.beta2
+    c = count.astype(jnp.float32)
+    bc1 = 1 - b1 ** c
+    bc2 = 1 - b2 ** c
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * clip
+        m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g
+        if isinstance(v, dict):  # factored second moment
+            g2 = g * g + 1e-30
+            row = b2 * v["row"] + (1 - b2) * g2.mean(axis=-1)
+            col = b2 * v["col"] + (1 - b2) * g2.mean(axis=-2)
+            v_new = {"row": row, "col": col}
+            # reconstruct: v ~ row x col / mean(row)
+            denom = jnp.maximum(row.mean(axis=-1, keepdims=True), 1e-30)
+            v32 = (row[..., None] * col[..., None, :] / denom[..., None]) / bc2
+        else:
+            v_new = (b2 * v.astype(jnp.float32) + (1 - b2) * g * g)
+            v32 = v_new / bc2
+            v_new = v_new.astype(sdt)
+        mhat = m32 / bc1
+        step = mhat / (jnp.sqrt(v32) + cfg.eps)
+        if p.ndim >= 2:  # decoupled weight decay on matrices only
+            step = step + cfg.weight_decay * p.astype(jnp.float32)
+        p_new = (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+        return p_new, m32.astype(sdt), v_new
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    metrics = {"lr": lr, "grad_norm": gnorm, "clip": clip}
+    return new_p, {"m": new_m, "v": new_v, "count": count}, metrics
+
+
+def optimizer_state_axes(params_axes, cfg: OptimizerConfig, params_values):
+    """Logical axes tree for the optimizer state (mirrors the params)."""
+
+    def v_axes(axes, p):
+        if cfg.factored and _is_factorable(p):
+            return {"row": axes[:-1], "col": axes[:-2] + axes[-1:]}
+        return axes
+
+    is_axes = lambda x: isinstance(x, tuple) and all(
+        isinstance(a, (str, type(None))) for a in x
+    )
+    return {
+        "m": params_axes,
+        "v": jax.tree_util.tree_map(v_axes, params_axes, params_values,
+                                    is_leaf=is_axes),
+        "count": (),
+    }

@@ -1,0 +1,50 @@
+"""Serving steps: batched prefill + single-token decode.
+
+``serve_step`` (decode) is what the assigned ``decode_32k`` / ``long_500k``
+shapes lower: one new token for the whole batch against a populated KV /
+recurrent-state cache.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model
+from repro.models.runtime import Runtime
+
+
+def make_prefill_step(model: Model, rt: Runtime):
+    def prefill_step(params, batch: Dict[str, jax.Array], cache):
+        logits, _, new_cache = model.apply(
+            params, batch, rt=rt, mode="prefill", cache=cache
+        )
+        return logits, new_cache
+
+    return prefill_step
+
+
+def make_decode_step(model: Model, rt: Runtime):
+    def decode_step(params, tokens: jax.Array, cache):
+        return model.decode_step(params, tokens, cache, rt=rt)
+
+    return decode_step
+
+
+def greedy_sample(logits: jax.Array) -> jax.Array:
+    return jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+
+
+def generate(model: Model, params, batch, *, rt: Runtime, cache, steps: int):
+    """Prefill + greedy decode loop (example/serving driver path)."""
+    prefill = make_prefill_step(model, rt)
+    decode = make_decode_step(model, rt)
+    logits, cache = prefill(params, batch, cache)
+    tok = greedy_sample(logits)
+    out = [tok]
+    for _ in range(steps - 1):
+        logits, cache = decode(params, tok, cache)
+        tok = greedy_sample(logits)
+        out.append(tok)
+    return jnp.concatenate(out, axis=1), cache

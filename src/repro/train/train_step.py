@@ -1,0 +1,95 @@
+"""Loss + train step with microbatched gradient accumulation.
+
+``microbatches`` (the paper's ``batch_size`` analogue in the tuning space)
+splits the per-step batch into k sequential microbatches via ``lax.scan``;
+gradients accumulate in fp32 and the collective all-reduce/reduce-scatter
+that SPMD inserts for data-parallel gradients happens once, after the scan
+(deferred reduction — compute/comm overlap trick #1 in DESIGN.md §8).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model
+from repro.models.runtime import Runtime
+from repro.optim.optimizer import OptimizerConfig, adamw_update
+
+AUX_LOSS_WEIGHT = 0.01
+
+
+def cross_entropy(logits: jax.Array, targets: jax.Array) -> jax.Array:
+    """Mean token cross-entropy in fp32.  logits (B,S,V), targets (B,S)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - gold)
+
+
+def make_loss_fn(model: Model, rt: Runtime):
+    def loss_fn(params, batch: Dict[str, jax.Array]):
+        logits, aux, _ = model.apply(params, batch, rt=rt, mode="full")
+        ce = cross_entropy(logits, batch["targets"])
+        loss = ce + AUX_LOSS_WEIGHT * aux
+        return loss, {"loss": loss, "ce": ce, "aux": aux}
+
+    return loss_fn
+
+
+def _split_microbatches(batch: Dict[str, jax.Array], k: int):
+    def sp(x):
+        b = x.shape[0]
+        assert b % k == 0, (b, k)
+        return x.reshape(k, b // k, *x.shape[1:])
+
+    return {name: sp(v) for name, v in batch.items()}
+
+
+def make_train_step(model: Model, opt_cfg: OptimizerConfig, rt: Runtime,
+                    microbatches: int = 1):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state, metrics)."""
+    loss_fn = make_loss_fn(model, rt)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            mb = _split_microbatches(batch, microbatches)
+            zero_g = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+
+            def mb_step(acc, mbatch):
+                (loss, metrics), grads = grad_fn(params, mbatch)
+                acc = jax.tree_util.tree_map(
+                    lambda a, g: a + g.astype(jnp.float32), acc, grads
+                )
+                return acc, (loss, metrics)
+
+            if rt.unroll_layers:  # exact HloCostAnalysis (roofline pipeline)
+                grads, outs = zero_g, []
+                for i in range(microbatches):
+                    grads, out = mb_step(
+                        grads,
+                        jax.tree_util.tree_map(lambda a: a[i], mb),
+                    )
+                    outs.append(out)
+                losses = jnp.stack([o[0] for o in outs])
+                metricses = jax.tree_util.tree_map(
+                    lambda *zs: jnp.stack(zs), *[o[1] for o in outs]
+                )
+            else:
+                grads, (losses, metricses) = jax.lax.scan(mb_step, zero_g, mb)
+            grads = jax.tree_util.tree_map(lambda g: g / microbatches, grads)
+            loss = losses.mean()
+            metrics = jax.tree_util.tree_map(jnp.mean, metricses)
+
+        params, opt_state, opt_metrics = adamw_update(grads, opt_state, params,
+                                                      opt_cfg)
+        metrics = dict(metrics, **opt_metrics, loss_out=loss)
+        return params, opt_state, metrics
+
+    return train_step

@@ -1,0 +1,138 @@
+"""Fault-tolerant training loop.
+
+Wires together model / optimizer / data / checkpointer / straggler
+detector.  Failure handling: a ``WorkerFailure`` raised during a step
+rolls back to the last checkpoint, applies an ``ElasticPlan`` (dp shrinks,
+tp preserved), rebuilds the jitted step, and resumes from the restored
+step — the deterministic data pipeline replays the identical stream.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.configs.base import ModelConfig
+from repro.data.pipeline import DataConfig, SyntheticTokens
+from repro.models.model import build_model
+from repro.models.params import split_params
+from repro.models.runtime import Runtime
+from repro.optim.optimizer import OptimizerConfig, adamw_init
+from repro.runtime.fault_tolerance import (
+    ElasticPlan,
+    FailureInjector,
+    StragglerDetector,
+    WorkerFailure,
+)
+from repro.train.train_step import make_train_step
+
+
+@dataclass
+class TrainerConfig:
+    steps: int = 100
+    checkpoint_every: int = 20
+    checkpoint_dir: Optional[str] = None
+    microbatches: int = 1
+    log_every: int = 10
+    seed: int = 0
+
+
+class Trainer:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        opt_cfg: OptimizerConfig,
+        data_cfg: DataConfig,
+        tcfg: TrainerConfig,
+        rt: Runtime = Runtime(compute_dtype="f32"),
+        failure_injector: Optional[FailureInjector] = None,
+    ):
+        self.cfg = cfg
+        self.opt_cfg = opt_cfg
+        self.data = SyntheticTokens(data_cfg)
+        self.tcfg = tcfg
+        self.rt = rt
+        self.model = build_model(cfg)
+        self.failures = failure_injector
+        self.straggler = StragglerDetector()
+        self.ckpt = (Checkpointer(tcfg.checkpoint_dir)
+                     if tcfg.checkpoint_dir else None)
+        self.metrics_log: List[Dict] = []
+        self.events: List[str] = []
+
+        params_tree = self.model.init(jax.random.PRNGKey(tcfg.seed))
+        self.params, self.params_axes = split_params(params_tree)
+        self.opt_state = adamw_init(self.params, opt_cfg)
+        self._build_step()
+        self.step = 0
+
+    def _build_step(self):
+        step_fn = make_train_step(self.model, self.opt_cfg, self.rt,
+                                  microbatches=self.tcfg.microbatches)
+        self._jitted = jax.jit(step_fn, donate_argnums=(0, 1))
+
+    # -- checkpoint/restart ----------------------------------------------------
+    def _save(self, metric: Optional[float] = None):
+        if not self.ckpt:
+            return
+        self.ckpt.save(
+            self.step,
+            {"params": self.params, "opt": self.opt_state},
+            metadata={"config": self.cfg.name},
+            metric=metric,
+        )
+
+    def _restore(self):
+        assert self.ckpt is not None, "failure without checkpointing enabled"
+        like = {"params": self.params, "opt": self.opt_state}
+        restored, meta = self.ckpt.restore(None, like)
+        self.params, self.opt_state = restored["params"], restored["opt"]
+        self.step = int(meta["step"])
+        self.events.append(f"restored step {self.step}")
+
+    # -- main loop ---------------------------------------------------------------
+    def run(self) -> List[Dict]:
+        last_metric = None
+        if self.ckpt and self.ckpt.latest_step() is not None:
+            self._restore()
+        while self.step < self.tcfg.steps:
+            batch_np = self.data.batch_at(self.step)
+            batch = {k: jax.numpy.asarray(v) for k, v in batch_np.items()}
+            t0 = time.perf_counter()
+            try:
+                if self.failures is not None:
+                    self.failures.check(self.step)
+                self.params, self.opt_state, metrics = self._jitted(
+                    self.params, self.opt_state, batch
+                )
+            except WorkerFailure as e:
+                self.events.append(f"failure at step {e.step}")
+                plan = ElasticPlan.after_failure(dp=2, tp=1,
+                                                 lost_chips=e.failed_workers)
+                self.events.append(
+                    f"elastic rescale dp {plan.old_dp}->{plan.new_dp}"
+                )
+                self._restore()
+                self._build_step()  # re-jit for the (new) topology
+                continue
+            dt = time.perf_counter() - t0
+            if self.straggler.update(dt):
+                self.events.append(f"straggler flagged at step {self.step}")
+            metrics = {k: float(v) for k, v in metrics.items()}
+            metrics.update(step=self.step, seconds=dt)
+            self.metrics_log.append(metrics)
+            last_metric = -metrics["loss"]
+            if self.tcfg.log_every and self.step % self.tcfg.log_every == 0:
+                print(f"[train] step {self.step:5d} loss {metrics['loss']:.4f} "
+                      f"({dt*1e3:.0f} ms)")
+            self.step += 1
+            if self.ckpt and self.step % self.tcfg.checkpoint_every == 0:
+                self._save(metric=last_metric)
+        if self.ckpt:
+            self._save(metric=last_metric)
+            self.ckpt.wait()
+        return self.metrics_log

@@ -1,0 +1,301 @@
+"""Three-term roofline for TPU v5e (DESIGN.md §7).
+
+    compute_term    = HLO_FLOPs_per_device / peak_FLOPs        [s]
+    memory_term     = HLO_bytes_per_device / HBM_bw            [s]
+    collective_term = collective_bytes_per_device / link_bw    [s]
+
+(cost_analysis reports per-device quantities post-SPMD, so dividing the
+global numerator by chips x per-chip-rate — the spec formula — is the same
+number.)  est_step_time = max of the three; throughput = tokens / est.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+# TPU v5e hardware constants (per chip)
+PEAK_FLOPS_BF16 = 197e12  # FLOP/s
+HBM_BW = 819e9  # B/s
+ICI_BW = 50e9  # B/s per link
+HBM_BYTES = 16e9  # HBM capacity
+
+# collective traffic multipliers (ring algorithms, per-device result bytes)
+_KIND_FACTOR = {
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-reduce": 2.0,  # reduce-scatter + all-gather
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+
+@dataclass
+class Roofline:
+    flops_per_device: float
+    bytes_per_device: float  # kernel-adjusted HBM traffic (headline term)
+    collective_bytes: float  # per device, kind-weighted
+    tokens_per_step: float
+    chips: int
+    model_flops: float = 0.0  # analytic 6*N*D (train) / 2*N*D (serve), global
+    memory_per_device: Optional[float] = None
+    collective_detail: str = ""
+    bytes_hlo_raw: float = 0.0  # spec formula: cost_analysis "bytes accessed"
+    bytes_kernel_credit: float = 0.0  # analytic kernel traffic added back
+
+    @property
+    def compute_term(self) -> float:
+        return self.flops_per_device / PEAK_FLOPS_BF16
+
+    @property
+    def memory_term(self) -> float:
+        return self.bytes_per_device / HBM_BW
+
+    @property
+    def collective_term(self) -> float:
+        return self.collective_bytes / ICI_BW
+
+    @property
+    def terms(self) -> Dict[str, float]:
+        return {
+            "compute": self.compute_term,
+            "memory": self.memory_term,
+            "collective": self.collective_term,
+        }
+
+    @property
+    def bottleneck(self) -> str:
+        t = self.terms
+        return max(t, key=t.get)
+
+    @property
+    def est_step_time(self) -> float:
+        return max(self.terms.values())
+
+    @property
+    def throughput(self) -> float:
+        """tokens/s at the roofline estimate."""
+        t = self.est_step_time
+        return self.tokens_per_step / t if t > 0 else float("inf")
+
+    @property
+    def roofline_fraction(self) -> float:
+        """What fraction of the step is pinned to the compute roof —
+        1.0 means perfectly compute-bound (the ceiling)."""
+        t = self.est_step_time
+        return self.compute_term / t if t > 0 else 0.0
+
+    @property
+    def mfu(self) -> float:
+        """Model FLOPs utilization at the estimated step time."""
+        t = self.est_step_time
+        if t <= 0 or not self.model_flops:
+            return 0.0
+        return self.model_flops / (t * self.chips * PEAK_FLOPS_BF16)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / global HLO FLOPs — catches remat/redundancy waste."""
+        hlo_global = self.flops_per_device * self.chips
+        return self.model_flops / hlo_global if hlo_global else 0.0
+
+    @property
+    def fits_hbm(self) -> Optional[bool]:
+        if self.memory_per_device is None:
+            return None
+        return self.memory_per_device <= HBM_BYTES
+
+    def row(self) -> Dict[str, object]:
+        return {
+            "compute_s": self.compute_term,
+            "memory_s": self.memory_term,
+            "collective_s": self.collective_term,
+            "bottleneck": self.bottleneck,
+            "est_step_s": self.est_step_time,
+            "throughput_tok_s": self.throughput,
+            "roofline_fraction": self.roofline_fraction,
+            "mfu": self.mfu,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "mem_per_device_GB": (self.memory_per_device or 0) / 1e9,
+            "fits_hbm": self.fits_hbm,
+            "collectives": self.collective_detail,
+            "memory_s_hlo_raw": self.bytes_hlo_raw / HBM_BW,
+            "kernel_credit_GB": self.bytes_kernel_credit / 1e9,
+        }
+
+
+def weighted_collective_bytes(bytes_by_kind: Dict[str, int]) -> float:
+    return float(sum(_KIND_FACTOR.get(k, 1.0) * v for k, v in bytes_by_kind.items()))
+
+
+def kernel_traffic_bytes(cfg, shape, bc, chips: int) -> float:
+    """Analytic per-device HBM traffic of the Pallas-kernelized regions
+    (flash attention / decode attention / ssm / gla scans): what the
+    kernels actually move — Q/O once, K/V streamed once per query block,
+    scan inputs/outputs once; softmax/scan state stays in VMEM.
+
+    Training multiplies by ~4 (fwd + remat replay + bwd reads/writes);
+    prefill/decode by 1.  This credit replaces the CPU-lowered op-chain
+    traffic of the tagged ``krnl_`` regions (hlo_analysis.traffic_analysis).
+    """
+    dp_total = bc.dp() * (2 if chips > 256 else 1)  # batch shards incl. pod
+    tp = bc.tp()
+    B_dev = max(1, shape.global_batch // min(dp_total, shape.global_batch))
+    bpe = 2  # bf16
+    train_factor = 4.0 if shape.kind == "train" else 1.0
+
+    def shard(n: int, ways: int) -> float:
+        return n / ways if n % ways == 0 else n  # divisibility rule
+
+    H, K, dh = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    H_dev = shard(H, tp)
+    total = 0.0
+    for i in range(cfg.num_layers):
+        mk = cfg.mixer_kind(i)
+        if mk in ("attn", "mla"):
+            if shape.kind == "decode":
+                # KV cache read once per token; cache seq shards over tp
+                Skv = min(shape.seq_len, cfg.sliding_window or shape.seq_len)
+                Skv_dev = shard(Skv, tp)
+                if mk == "mla":
+                    row = cfg.mla.kv_lora_rank + cfg.mla.qk_rope_head_dim
+                    total += B_dev * Skv_dev * row * bpe
+                else:
+                    total += 2 * B_dev * Skv_dev * K * dh * bpe
+                total += 2 * B_dev * H_dev * dh * bpe  # q + out
+            else:
+                S = shape.seq_len
+                nq = max(1, -(-S // bc.block_q))
+                qo = 2 * B_dev * S * H_dev * dh * bpe
+                if mk == "mla":  # expanded k/v per head in parallel modes
+                    kv = 2 * B_dev * S * H_dev * max(dh, cfg.mla.v_head_dim) * bpe
+                else:
+                    kv = 2 * B_dev * S * shard(K, tp) * dh * bpe
+                total += (qo + nq * kv) * train_factor
+        elif mk == "mamba":
+            d_in = cfg.mamba.expand * cfg.d_model
+            d_dev = shard(d_in, tp)
+            S = 1 if shape.kind == "decode" else shape.seq_len
+            n = cfg.mamba.d_state
+            # x, dt, y over d_dev + B, C over d_state, in/out once
+            total += (3 * B_dev * S * d_dev + 2 * B_dev * S * n) * bpe * train_factor
+        elif mk == "rwkv":
+            S = 1 if shape.kind == "decode" else shape.seq_len
+            D = cfg.d_model
+            total += 5 * B_dev * S * D * bpe * train_factor  # r,k,v,w in; y out
+    return float(total)
+
+
+def analytic_hbm_traffic(cfg, shape, bc, chips: int) -> Dict[str, float]:
+    """Per-device, per-step HBM traffic under TPU-grade fusion (the
+    "ideal-fused" memory term; DESIGN.md §7).
+
+    Model: every materialized tensor is written once and read once by its
+    consumer kernel; elementwise chains fuse; the Pallas-kernelized regions
+    contribute their analytic stream traffic (kernel_traffic_bytes).
+    Components:
+      * params+optimizer — fwd/bwd weight reads, grad write/read, Adam m/v
+        read+write, param update (train); one weight read (serve)
+      * activations      — per-layer matmul inputs/outputs + norms +
+        residuals (+ MoE dispatch/combine buffers), x4 for train
+        (fwd + remat replay + ~2x bwd), x1 otherwise
+      * logits/CE        — fp32 logits write+read + bwd
+      * kernels          — attention/scan streams (kernel_traffic_bytes)
+      * carry stack      — remat-saved per-layer residual write+read (train)
+    """
+    dp_total = bc.dp() * (2 if chips > 256 else 1)
+    tp = bc.tp()
+    B_dev = max(1, shape.global_batch // min(dp_total, shape.global_batch))
+    S = 1 if shape.kind == "decode" else shape.seq_len
+    D = cfg.d_model
+    bpe = 2.0
+    train = shape.kind == "train"
+    act_factor = 4.0 if train else 1.0
+
+    def shard(n: int, ways: int) -> float:
+        return n / ways if n % ways == 0 else n
+
+    # --- params + optimizer ---
+    p_total = cfg.param_counts()["total"]
+    p_dev = p_total / chips  # fsdp_tp shards essentially everything
+    if bc.sharding_style == "tp":
+        p_dev = p_total / tp
+    if train:
+        opt_bpe = 2 if bc.opt_state_dtype == "bf16" else 4
+        # w read fwd + read bwd (4+4, f32 master) + grad write+read (4+4)
+        # + m,v read+write (4*opt_bpe) + p write (4)
+        params_bytes = p_dev * (4 + 4 + 4 + 4 + 4 * opt_bpe + 4)
+    else:
+        params_bytes = p_dev * 4  # f32 weights read once per step (baseline)
+
+    # --- per-layer activations ---
+    H, K, dh = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    H_dev, K_dev = shard(H, tp), shard(K, tp)
+    act = 0.0
+    for i in range(cfg.num_layers):
+        mk, fk = cfg.mixer_kind(i), cfg.mlp_kind(i)
+        bsd = B_dev * S * D * bpe
+        layer = 4 * bsd  # 2 norms + 2 residual adds (read+write fused pairs)
+        if mk in ("attn", "mla"):
+            qkv_out = B_dev * S * (H_dev + 2 * K_dev) * dh * bpe
+            layer += bsd + qkv_out  # qkv proj in/out
+            layer += B_dev * S * H_dev * dh * bpe + bsd  # out proj in/out
+        elif mk == "mamba":
+            d_in = shard(cfg.mamba.expand * D, tp)
+            layer += bsd + 2 * B_dev * S * d_in * bpe  # in_proj
+            layer += 2 * B_dev * S * d_in * bpe + bsd  # gate+out_proj
+        elif mk == "rwkv":
+            layer += 5 * bsd + 2 * bsd  # r,k,v,g,w projections + out
+        if cfg.rwkv is not None:
+            ff = shard(cfg.d_ff, tp)
+            layer += 2 * bsd + 3 * B_dev * S * ff * bpe
+        elif fk == "moe":
+            m = cfg.moe
+            e_dev = shard(m.num_experts, tp)
+            cf = bc.capacity_factor or m.capacity_factor
+            tokens_dev = B_dev * S * m.top_k * cf
+            ff = m.d_expert if m.num_experts % tp == 0 else shard(m.d_expert, tp)
+            layer += B_dev * S * m.num_experts * 4  # router logits
+            layer += 2 * tokens_dev * D * bpe * 2  # dispatch + combine buffers
+            layer += tokens_dev * (2 * D + 3 * ff) * bpe  # expert mlp streams
+        else:
+            ff = shard(cfg.d_ff, tp)
+            layer += 2 * bsd + 3 * B_dev * S * ff * bpe
+        act += layer
+    act *= act_factor
+    if train:  # remat carry stack: save + re-read layer inputs
+        act += 2 * cfg.num_layers * B_dev * shape.seq_len * D * bpe
+
+    # --- logits / CE ---
+    V_dev = shard(cfg.padded_vocab, tp)
+    S_logit = shape.seq_len if shape.kind == "train" else 1
+    logits = B_dev * S_logit * V_dev * (4 + 4)  # f32 write + read
+    if train:
+        logits *= 2  # bwd pass over logits
+
+    kernels = kernel_traffic_bytes(cfg, shape, bc, chips)
+    total = params_bytes + act + logits + kernels
+    return {
+        "params": float(params_bytes),
+        "activations": float(act),
+        "logits": float(logits),
+        "kernels": float(kernels),
+        "total": float(total),
+    }
+
+
+def model_flops(cfg, shape, n_active_params: int) -> float:
+    """Analytic MODEL_FLOPS per step: 6*N*D train, 2*N*D inference."""
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active_params * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active_params * tokens
+    tokens = shape.global_batch  # decode: one token per sequence
+    return 2.0 * n_active_params * tokens
+
+
+def tokens_per_step(shape) -> float:
+    if shape.kind == "decode":
+        return float(shape.global_batch)
+    return float(shape.global_batch * shape.seq_len)

@@ -1,0 +1,114 @@
+"""Objective evaluators — the "system under test" side of paper Fig. 4.
+
+* ``WallClockEvaluator`` — the paper-faithful measurement path: apply the
+  configuration, run the jitted step on the local device(s), report
+  measured throughput (examples- or tokens-/second).
+* ``RooflineEvaluator`` — the TPU-shaped path for this CPU-only container:
+  lower+compile the production-mesh program for the configuration and
+  report the roofline-estimated throughput (tokens/second).  A
+  configuration whose per-device footprint exceeds HBM is a *failed run*
+  (-inf), exactly like a crashed measurement in the paper's harness.
+
+Both are plain callables point->(value, meta) so every engine sees the
+same interface.
+"""
+from __future__ import annotations
+
+import json
+import math
+import pathlib
+import time
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.tuning.cost_model import HBM_BYTES
+from repro.tuning.parameters import BASELINE, BackendConfig, config_from_point
+
+
+class RooflineEvaluator:
+    def __init__(
+        self,
+        arch: str,
+        shape_name: str,
+        *,
+        multi_pod: bool = False,
+        chips_per_pod: int = 256,
+        base: BackendConfig = BASELINE,
+        hbm_bytes: float = HBM_BYTES,
+        cache_path: Optional[str] = None,
+    ):
+        self.arch = arch
+        self.shape_name = shape_name
+        self.multi_pod = multi_pod
+        self.chips_per_pod = chips_per_pod
+        self.base = base
+        self.hbm_bytes = hbm_bytes
+        self.cache_path = pathlib.Path(cache_path) if cache_path else None
+        self._cache: Dict[str, dict] = {}
+        if self.cache_path and self.cache_path.exists():
+            self._cache = json.loads(self.cache_path.read_text())
+
+    def _key(self, bc: BackendConfig) -> str:
+        return json.dumps(
+            {"arch": self.arch, "shape": self.shape_name, "mp": self.multi_pod,
+             "bc": bc.__dict__}, sort_keys=True)
+
+    def __call__(self, point: Dict) -> Tuple[float, dict]:
+        from repro.launch.dryrun import analyze_cell  # lazy: sets XLA_FLAGS
+
+        bc = config_from_point(point, self.base)
+        key = self._key(bc)
+        if key in self._cache:
+            rec = self._cache[key]
+        else:
+            rec = analyze_cell(
+                self.arch, self.shape_name, multi_pod=self.multi_pod,
+                bc=bc, chips_per_pod=self.chips_per_pod,
+            )
+            self._cache[key] = rec
+            if self.cache_path:
+                self.cache_path.parent.mkdir(parents=True, exist_ok=True)
+                self.cache_path.write_text(json.dumps(self._cache, default=str))
+        if rec.get("skipped"):
+            return -math.inf, {"skip_reason": rec["skip_reason"]}
+        mem = rec["memory"]["per_device_B"]
+        meta = {"roofline": rec["roofline"], "mem_per_device_B": mem}
+        if mem > self.hbm_bytes:
+            return -math.inf, dict(meta, oom=True)
+        return float(rec["roofline"]["throughput_tok_s"]), meta
+
+
+class WallClockEvaluator:
+    """Measured throughput of a step built from the configuration point.
+
+    ``make_step(point) -> (step_fn, args, examples_per_step)``:
+    the builder applies the point's backend parameters (Runtime knobs,
+    microbatches, ...) and returns a jittable step plus its inputs.
+    """
+
+    def __init__(
+        self,
+        make_step: Callable[[Dict], Tuple[Callable, tuple, float]],
+        *,
+        warmup: int = 1,
+        iters: int = 3,
+    ):
+        self.make_step = make_step
+        self.warmup = warmup
+        self.iters = iters
+
+    def __call__(self, point: Dict) -> Tuple[float, dict]:
+        step, args, examples = self.make_step(point)
+        jitted = jax.jit(step)
+        out = None
+        for _ in range(self.warmup):
+            out = jitted(*args)
+        jax.block_until_ready(out)
+        t0 = time.perf_counter()
+        for _ in range(self.iters):
+            out = jitted(*args)
+        jax.block_until_ready(out)
+        dt = (time.perf_counter() - t0) / self.iters
+        return examples / dt, {"step_seconds": dt}

@@ -1,0 +1,260 @@
+"""HLO text analysis: collective bytes + scan-aware cost extraction.
+
+``compiled.cost_analysis()`` gives per-device HLO FLOPs/bytes;
+collective traffic is NOT in cost_analysis, so we parse the (post-SPMD,
+per-device) HLO text and sum operand bytes of every collective op,
+multiplying ops inside ``while`` loop bodies by the loop trip count
+(scan-over-layers!).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVE_KINDS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_TRIP_RE = re.compile(r"trip_count=(\d+)")
+# e.g.: %fusion.1 = (f32[8,128]{1,0}, ...) all-gather(...)
+_OP_RE = re.compile(r"=\s+(\([^)]*\)|\S+)\s+([\w-]+)(\.\d+)?\(")
+
+
+def shape_bytes(shape_str: str) -> int:
+    """Sum bytes over every tensor literal in an HLO shape string."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_kind: Dict[str, int] = field(default_factory=lambda: defaultdict(int))
+    count_by_kind: Dict[str, int] = field(default_factory=lambda: defaultdict(int))
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+    def summary(self) -> str:
+        if not self.bytes_by_kind:
+            return "none"
+        parts = [
+            f"{k}:{self.count_by_kind[k]}x/{self.bytes_by_kind[k]/1e6:.1f}MB"
+            for k in sorted(self.bytes_by_kind)
+        ]
+        return " ".join(parts)
+
+
+def _computation_blocks(hlo: str) -> Dict[str, str]:
+    """Split HLO text into computation bodies keyed by computation name."""
+    blocks: Dict[str, str] = {}
+    cur_name, cur_lines = None, []
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        is_header = stripped.endswith("{") and "->" in stripped and "=" not in stripped.split("(")[0]
+        if is_header:
+            if cur_name is not None:
+                blocks[cur_name] = "\n".join(cur_lines)
+            name = stripped.split("(")[0].strip()
+            if name.startswith("ENTRY"):
+                name = name[len("ENTRY"):].strip()
+            cur_name, cur_lines = name.lstrip("%").strip(), []
+        elif stripped.startswith("}"):
+            if cur_name is not None:
+                blocks[cur_name] = "\n".join(cur_lines)
+                cur_name, cur_lines = None, []
+        elif cur_name is not None:
+            cur_lines.append(line)
+    if cur_name is not None:
+        blocks[cur_name] = "\n".join(cur_lines)
+    return blocks
+
+
+def _while_trip_counts(hlo: str) -> Dict[str, int]:
+    """Map while-body computation name -> EFFECTIVE trip count (the product
+    along the while-nesting chain: a layer scan inside a microbatch loop
+    runs trips_layer x trips_mb times).
+
+    XLA annotates `while` ops with backend_config known_trip_count after
+    simplification."""
+    own_trip: Dict[str, int] = {}
+    edges: Dict[str, list] = defaultdict(list)  # enclosing block -> child bodies
+    blocks = _computation_blocks(hlo)
+    for name, text in blocks.items():
+        for line in text.splitlines():
+            if " while(" not in line:
+                continue
+            body = re.search(r"body=%?([\w\.\-_]+)", line)
+            if not body:
+                continue
+            child = body.group(1)
+            kt = re.search(r'"known_trip_count":\s*\{"n":"?(\d+)"?\}', line)
+            if not kt:
+                kt = _TRIP_RE.search(line)
+            own_trip[child] = int(kt.group(1)) if kt else 1
+            edges[name].append(child)
+    # propagate multipliers down the nesting tree (roots: entry blocks)
+    eff: Dict[str, int] = {}
+    parents = {c: p for p, cs in edges.items() for c in cs}
+
+    def mult_of(block: str) -> int:
+        if block not in parents:  # reached an entry-level computation
+            return 1
+        p = parents[block]
+        return own_trip.get(block, 1) * mult_of(p)
+
+    for child in own_trip:
+        eff[child] = mult_of(child)
+    return eff
+
+
+def collect_collective_stats(hlo: str) -> CollectiveStats:
+    """Sum collective operand bytes, scaling while-body ops by trip count."""
+    stats = CollectiveStats()
+    blocks = _computation_blocks(hlo)
+    trips = _while_trip_counts(hlo)
+
+    def scan_block(text: str, multiplier: int):
+        for line in text.splitlines():
+            for kind in _COLLECTIVE_KINDS:
+                # ops appear as `kind(`, `kind.N(`, or `kind-start(`
+                if re.search(rf"=.*\s{kind}(?:-start)?(?:\.\d+)?\(", line):
+                    # operand bytes = result shape bytes (collectives are
+                    # shape-preserving except all-gather: use result which
+                    # upper-bounds traffic) — take the shape on the lhs.
+                    lhs = line.split("=", 1)[1] if "=" in line else line
+                    shape_part = lhs.strip().split(" ", 1)[0]
+                    b = shape_bytes(shape_part)
+                    stats.bytes_by_kind[kind] += b * multiplier
+                    stats.count_by_kind[kind] += multiplier
+                    break
+
+    # entry + all non-while computations count once; while bodies x trips
+    for name, text in blocks.items():
+        mult = trips.get(name, 1)
+        scan_block(text, mult)
+    return stats
+
+
+_NO_TRAFFIC_OPS = {
+    "tuple", "get-tuple-element", "bitcast", "parameter", "constant",
+    "after-all", "partition-id", "replica-id", "iota", "reshape",
+    "optimization-barrier",
+}
+
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*((?:\([^=]*?\)|\S+))\s+([\w\-]+)(?:\.\d+)?\(")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+_META_RE = re.compile(r'op_name="([^"]*)"')
+
+
+@dataclass
+class TrafficStats:
+    """Per-op HBM traffic accounting over the optimized per-device HLO.
+
+    For every instruction in *executable* computations (entry + while
+    bodies, the latter scaled by known trip counts; fusion internals are
+    skipped — the fusion call-site's external operands/outputs count),
+    traffic = output bytes + sum(operand bytes).  Pure-aliasing ops are
+    skipped.  Ops whose metadata carries a ``krnl_`` scope (regions the
+    Pallas kernels keep in VMEM on the real target) are bucketed
+    separately so the roofline memory term can credit them with their
+    true HBM traffic instead of the CPU-unfused op chain."""
+
+    included_bytes: float = 0.0
+    excluded_bytes: float = 0.0
+    excluded_by_tag: Dict[str, float] = field(default_factory=lambda: defaultdict(float))
+
+
+def traffic_analysis(hlo: str, exclude_substr: tuple = ("krnl_",)) -> TrafficStats:
+    # pass 1: def table name -> bytes
+    def_bytes: Dict[str, int] = {}
+    for line in hlo.splitlines():
+        m = _DEF_RE.match(line)
+        if m:
+            def_bytes[m.group(1)] = shape_bytes(m.group(2))
+
+    blocks = _computation_blocks(hlo)
+    trips = _while_trip_counts(hlo)
+    # executable computations: ENTRY + while bodies/conds; fusion internals out
+    while_bodies = set(trips)
+    for line in hlo.splitlines():
+        mb = re.search(r"while\(.*?body=%?([\w\.\-]+)", line)
+        if mb:
+            while_bodies.add(mb.group(1))
+    exec_blocks = {}
+    for name, text in blocks.items():
+        if name in while_bodies:
+            exec_blocks[name] = trips.get(name, 1)
+        elif "ENTRY" in hlo and name in _entry_names(hlo):
+            exec_blocks[name] = 1
+    stats = TrafficStats()
+    for name, mult in exec_blocks.items():
+        for line in blocks[name].splitlines():
+            m = _DEF_RE.match(line)
+            if not m:
+                continue
+            out_name, shape_str, op_kind = m.groups()
+            if op_kind in _NO_TRAFFIC_OPS or op_kind == "while":
+                continue
+            out_b = shape_bytes(shape_str)
+            operand_b = 0
+            args_part = line.split("(", 1)[1] if "(" in line else ""
+            args_part = args_part.split("metadata=")[0]
+            for om in _OPERAND_RE.finditer(args_part):
+                operand_b += def_bytes.get(om.group(1), 0)
+            total = (out_b + operand_b) * mult
+            meta = _META_RE.search(line)
+            tag = None
+            if meta:
+                for sub in exclude_substr:
+                    idx = meta.group(1).find(sub)
+                    if idx >= 0:
+                        tag = meta.group(1)[idx:].split("/")[0]
+                        break
+            if tag:
+                stats.excluded_bytes += total
+                stats.excluded_by_tag[tag] += total
+            else:
+                stats.included_bytes += total
+    return stats
+
+
+def _entry_names(hlo: str) -> set:
+    out = set()
+    for line in hlo.splitlines():
+        m = re.match(r"ENTRY\s+%?([\w\.\-]+)", line.strip())
+        if m:
+            out.add(m.group(1))
+    return out
+
+
+def cost_with_scan_correction(compiled, hlo: Optional[str] = None) -> Dict[str, float]:
+    """compiled.cost_analysis() flops/bytes.  XLA's HloCostAnalysis already
+    multiplies while-body cost by trip count when it is statically known
+    (verified empirically in tests/test_hlo_analysis.py); this wrapper just
+    normalizes key names across jax versions."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):  # older jax returns [dict]
+        ca = ca[0]
+    flops = float(ca.get("flops", 0.0))
+    bytes_accessed = float(ca.get("bytes accessed", 0.0))
+    return {"flops": flops, "bytes": bytes_accessed, "raw": dict(ca)}

@@ -1,0 +1,130 @@
+"""Per-architecture smoke tests: reduced same-family config, one forward +
+one train step on CPU, asserting shapes and no NaNs (assignment req)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, list_archs
+from repro.models import CPU_TEST, build_model
+from repro.models.params import split_params
+from repro.optim.optimizer import OptimizerConfig, adamw_init
+from repro.train.train_step import make_train_step
+
+ARCHS = list_archs()
+
+
+def _batch(cfg, B=2, S=24, train=True):
+    rng = np.random.default_rng(0)
+    batch = {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)}
+    if train:
+        batch["targets"] = jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+    if cfg.family == "vlm":
+        batch["image_embeds"] = jnp.asarray(
+            0.01 * rng.standard_normal((B, cfg.num_frontend_tokens, cfg.d_model)),
+            jnp.float32)
+    if cfg.encoder_layers:
+        batch["encoder_embeds"] = jnp.asarray(
+            0.01 * rng.standard_normal((B, cfg.encoder_seq_len, cfg.d_model)),
+            jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_shapes_no_nans(arch):
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    params, _ = split_params(model.init(jax.random.PRNGKey(0)))
+    batch = _batch(cfg, train=False)
+    logits, aux, _ = model.apply(params, batch, rt=CPU_TEST)
+    B, S = batch["tokens"].shape
+    assert logits.shape == (B, S, cfg.padded_vocab)
+    assert not bool(jnp.isnan(logits).any()), f"{arch}: NaN logits"
+    assert bool(jnp.isfinite(aux)), f"{arch}: non-finite aux loss"
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step_no_nans(arch):
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    params, _ = split_params(model.init(jax.random.PRNGKey(0)))
+    opt_cfg = OptimizerConfig(learning_rate=1e-3, warmup_steps=1)
+    opt = adamw_init(params, opt_cfg)
+    step = jax.jit(make_train_step(model, opt_cfg, CPU_TEST))
+    batch = _batch(cfg)
+    params2, opt2, metrics = step(params, opt, batch)
+    assert np.isfinite(float(metrics["loss"])), f"{arch}: NaN loss"
+    assert np.isfinite(float(metrics["grad_norm"])), f"{arch}: NaN grads"
+    # at least some parameter moved
+    moved = any(
+        not np.allclose(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree_util.tree_leaves(params),
+                        jax.tree_util.tree_leaves(params2))
+    )
+    assert moved, f"{arch}: update was a no-op"
+
+
+@pytest.mark.parametrize("arch", ["qwen2-0.5b", "jamba-v0.1-52b", "rwkv6-3b",
+                                  "minicpm3-4b", "whisper-base",
+                                  "h2o-danube-1.8b"])
+def test_prefill_decode_consistency(arch):
+    """decode_step after prefill must match a full forward (bf16-cache tol)."""
+    cfg = get_config(arch).reduced()
+    if cfg.moe is not None:
+        cfg = dataclasses.replace(cfg)  # capacity handled via rt below
+    model = build_model(cfg)
+    rt = dataclasses.replace(CPU_TEST, moe_capacity_factor=16.0)
+    params, _ = split_params(model.init(jax.random.PRNGKey(0)))
+    B, S = 2, 24
+    batch = _batch(cfg, B, S, train=False)
+    cache, _ = split_params(model.init_cache(B, 32))
+    lg_pre, _, cache = model.apply(params, batch, rt=rt, mode="prefill",
+                                   cache=cache)
+    lg_full, _, _ = model.apply(params, batch, rt=rt)
+    np.testing.assert_allclose(np.asarray(lg_pre[:, 0]),
+                               np.asarray(lg_full[:, -1]), atol=1e-4)
+    tok = jnp.argmax(lg_pre[:, 0], -1)[:, None].astype(jnp.int32)
+    lg_dec, cache = model.decode_step(params, tok, cache, rt=rt)
+    b2 = dict(batch)
+    b2["tokens"] = jnp.concatenate([batch["tokens"], tok], axis=1)
+    lg_full2, _, _ = model.apply(params, b2, rt=rt)
+    ref = np.asarray(lg_full2[:, -1])
+    err = np.abs(np.asarray(lg_dec[:, 0]) - ref).max()
+    assert err / (np.abs(ref).max() + 1e-9) < 2e-2, f"{arch}: decode diverges"
+
+
+def test_sliding_window_cache_is_bounded():
+    cfg = get_config("h2o-danube-1.8b").reduced()
+    model = build_model(cfg)
+    cache, _ = split_params(model.init_cache(2, 100))
+    k_leaves = [v for k, v in jax.tree_util.tree_flatten_with_path(cache)[0]
+                if ".mixer" in jax.tree_util.keystr(k[ :-1]) or True]
+    # every attn cache buffer seq dim is capped at the window
+    shapes = [v.shape for v in jax.tree_util.tree_leaves(cache)
+              if hasattr(v, "shape") and len(getattr(v, "shape", ())) == 5]
+    assert shapes, "no stacked kv cache found"
+    for s in shapes:
+        assert s[2] <= cfg.sliding_window
+
+
+def test_mla_cache_is_latent_sized():
+    cfg = get_config("minicpm3-4b").reduced()
+    model = build_model(cfg)
+    cache, _ = split_params(model.init_cache(2, 64))
+    leaves = {jax.tree_util.keystr(p): v.shape
+              for p, v in jax.tree_util.tree_flatten_with_path(cache)[0]}
+    ckv = [s for k, s in leaves.items() if "ckv" in k]
+    assert ckv and ckv[0][-1] == cfg.mla.kv_lora_rank  # compressed, not H*dh
+
+
+def test_layer_period_plans():
+    jamba = get_config("jamba-v0.1-52b")
+    assert jamba.layer_period() == 8
+    plan = jamba.layer_plan()
+    assert sum(1 for m, _ in plan if m == "attn") == 4  # 1:7 ratio over 32
+    assert sum(1 for _, f in plan if f == "moe") == 16  # MoE every 2
+    assert get_config("qwen2-0.5b").layer_period() == 1

@@ -1,0 +1,97 @@
+"""ssm_scan / gla_scan Pallas kernels vs oracles, incl. chunked forms."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+def _mk(rng, *shape, dtype=jnp.float32):
+    return jnp.asarray(rng.standard_normal(shape), dtype)
+
+
+SSM_SWEEP = [
+    # B, S, D, N, chunk, block_d
+    (1, 16, 8, 4, 8, 8),
+    (2, 50, 12, 8, 16, 8),
+    (1, 33, 24, 16, 8, 16),
+    (2, 64, 16, 4, 32, 4),
+]
+
+
+@pytest.mark.parametrize("case", SSM_SWEEP, ids=[str(c) for c in SSM_SWEEP])
+def test_ssm_scan_pallas_matches_naive(rng, case):
+    B, S, D, N, chunk, block_d = case
+    x = _mk(rng, B, S, D)
+    dt = jnp.abs(_mk(rng, B, S, D)) * 0.1
+    A = -jnp.abs(_mk(rng, D, N))
+    Bi, Ci, Dv = _mk(rng, B, S, N), _mk(rng, B, S, N), _mk(rng, D)
+    y_naive = ops.ssm_scan(x, dt, A, Bi, Ci, Dv, impl="ref")
+    y_chunk = ops.ssm_scan(x, dt, A, Bi, Ci, Dv, impl="chunked", chunk=chunk)
+    y_pal = ops.ssm_scan(x, dt, A, Bi, Ci, Dv, impl="pallas", chunk=chunk,
+                         block_d=block_d)
+    np.testing.assert_allclose(np.asarray(y_chunk), np.asarray(y_naive),
+                               atol=2e-4, rtol=2e-4)
+    np.testing.assert_allclose(np.asarray(y_pal), np.asarray(y_naive),
+                               atol=2e-4, rtol=2e-4)
+
+
+def test_ssm_scan_state_continuity(rng):
+    """Chunked scan's carried state == running the naive scan in two halves."""
+    B, S, D, N = 1, 32, 8, 4
+    x = _mk(rng, B, S, D)
+    dt = jnp.abs(_mk(rng, B, S, D)) * 0.1
+    A = -jnp.abs(_mk(rng, D, N))
+    Bi, Ci, Dv = _mk(rng, B, S, N), _mk(rng, B, S, N), _mk(rng, D)
+    y_full, h_full = ref.ssm_scan_ref(x, dt, A, Bi, Ci, Dv)
+    _, h1 = ref.ssm_scan_ref(x[:, :16], dt[:, :16], A, Bi[:, :16], Ci[:, :16], Dv)
+    y2, h2 = ref.ssm_scan_ref(x[:, 16:], dt[:, 16:], A, Bi[:, 16:], Ci[:, 16:],
+                              Dv, h0=h1)
+    np.testing.assert_allclose(np.asarray(h2), np.asarray(h_full), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(y2), np.asarray(y_full[:, 16:]),
+                               atol=1e-5)
+
+
+GLA_SWEEP = [
+    # B, S, H, dk, dv, chunk
+    (1, 16, 2, 8, 8, 8),
+    (2, 45, 3, 8, 8, 16),
+    (1, 40, 4, 16, 16, 8),
+]
+
+
+@pytest.mark.parametrize("case", GLA_SWEEP, ids=[str(c) for c in GLA_SWEEP])
+def test_gla_scan_pallas_matches_naive(rng, case):
+    B, S, H, dk, dv, chunk = case
+    r, k, v = _mk(rng, B, S, H, dk), _mk(rng, B, S, H, dk), _mk(rng, B, S, H, dv)
+    w = jnp.exp(-jnp.exp(_mk(rng, B, S, H, dk) * 0.5 - 1.0))
+    u = _mk(rng, H, dk)
+    y_naive = ops.gla_scan(r, k, v, w, u, impl="ref")
+    y_chunk = ops.gla_scan(r, k, v, w, u, impl="chunked", chunk=chunk)
+    y_pal = ops.gla_scan(r, k, v, w, u, impl="pallas", chunk=chunk)
+    np.testing.assert_allclose(np.asarray(y_chunk), np.asarray(y_naive),
+                               atol=2e-4, rtol=2e-3)
+    np.testing.assert_allclose(np.asarray(y_pal), np.asarray(y_naive),
+                               atol=2e-4, rtol=2e-3)
+
+
+def test_gla_strong_decay_stable(rng):
+    """Very strong decays must not produce inf/nan in the chunked form."""
+    B, S, H, dk, dv = 1, 64, 2, 8, 8
+    r, k, v = _mk(rng, B, S, H, dk), _mk(rng, B, S, H, dk), _mk(rng, B, S, H, dv)
+    w = jnp.full((B, S, H, dk), 1e-6)  # near-total forgetting per step
+    u = _mk(rng, H, dk)
+    y = ops.gla_scan(r, k, v, w, u, impl="chunked", chunk=32)
+    assert bool(jnp.isfinite(y).all())
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_pallas_matches_ref(rng, dtype):
+    x = _mk(rng, 5, 33, 64, dtype=dtype)
+    s = _mk(rng, 64, dtype=jnp.float32)
+    out_ref = ops.rmsnorm(x, s, impl="ref")
+    out_pal = ops.rmsnorm(x, s, impl="pallas", block_rows=8)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(out_pal, np.float32),
+                               np.asarray(out_ref, np.float32), atol=tol,
+                               rtol=tol)

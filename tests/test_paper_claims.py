@@ -1,0 +1,58 @@
+"""Validation of the paper's own claims on measured tuning workloads
+(EXPERIMENTS.md §Paper-validation; faster variants of benchmarks/fig5).
+
+Claims (paper §4.2-§4.3, §6):
+  1. BO delivers the best (or tied-best) throughput on the majority of
+     workloads within a 50-iteration budget.
+  2. BO samples (near-)100% of every parameter's tunable range; GA covers
+     the least; NMS sits between (Table 2).
+  3. No single algorithm wins on every workload.
+"""
+import numpy as np
+import pytest
+
+from repro.core import SearchSpace, Tuner, TunerConfig
+from benchmarks.workloads import MEASURED_WORKLOADS, surrogate_objective
+
+ALGOS = ("bo", "ga", "nms")
+
+
+def _run(workload, algo, seed, budget=50):
+    space = SearchSpace.from_dicts(workload["space"])
+    obj = surrogate_objective(workload)
+    t = Tuner(obj, space, TunerConfig(algorithm=algo, budget=budget,
+                                      seed=seed, verbose=False))
+    return t.run()
+
+
+@pytest.mark.parametrize("workload", MEASURED_WORKLOADS,
+                         ids=[w["name"] for w in MEASURED_WORKLOADS])
+def test_all_engines_complete_budget(workload):
+    for algo in ALGOS:
+        h = _run(workload, algo, seed=0, budget=25)
+        assert len(h) == 25
+        assert np.isfinite(h.best().value)
+
+
+def test_bo_wins_majority_of_workloads():
+    wins = 0
+    for w in MEASURED_WORKLOADS:
+        scores = {a: np.mean([_run(w, a, s).best().value for s in (0, 1)])
+                  for a in ALGOS}
+        top = max(scores.values())
+        if scores["bo"] >= top - 1e-2 * abs(top):
+            wins += 1
+    assert wins >= (len(MEASURED_WORKLOADS) + 1) // 2, f"BO won only {wins}"
+
+
+def test_exploration_ordering_bo_ge_nms():
+    """Table 2: BO coverage ~100%, >= NMS coverage on average."""
+    w = MEASURED_WORKLOADS[0]
+    cov = {}
+    for algo in ALGOS:
+        h = _run(w, algo, seed=0)
+        fr = h.sampled_range_fraction()
+        cov[algo] = np.mean(list(fr.values()))
+    assert cov["bo"] >= 0.9
+    assert cov["bo"] >= cov["nms"] - 0.05
+    assert cov["bo"] >= cov["ga"] - 0.05

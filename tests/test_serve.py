@@ -1,0 +1,74 @@
+"""Serving path: generate() coherence and KV-cache reuse."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import CPU_TEST, build_model
+from repro.models.params import split_params
+from repro.serve.serve_step import generate, make_decode_step, make_prefill_step
+
+
+def test_generate_matches_teacher_forcing():
+    """Greedy generation step-by-step == argmax of full forward each step."""
+    cfg = get_config("qwen2-0.5b").reduced()
+    model = build_model(cfg)
+    rt = CPU_TEST
+    params, _ = split_params(model.init(jax.random.PRNGKey(0)))
+    rng = np.random.default_rng(0)
+    B, S, G = 2, 16, 6
+    prompt = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+    cache, _ = split_params(model.init_cache(B, S + G))
+    gen, _ = generate(model, params, {"tokens": prompt}, rt=rt, cache=cache,
+                      steps=G)
+    assert gen.shape == (B, G)
+
+    # teacher-forced reference: rerun full forward with generated prefix
+    toks = prompt
+    for t in range(G):
+        logits, _, _ = model.apply(params, {"tokens": toks}, rt=rt)
+        nxt = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+        np.testing.assert_array_equal(np.asarray(nxt[:, 0]),
+                                      np.asarray(gen[:, t]))
+        toks = jnp.concatenate([toks, nxt], axis=1)
+
+
+def test_decode_state_isolated_across_batch():
+    """Each sequence's cache must be independent (no cross-batch leaks)."""
+    cfg = get_config("rwkv6-3b").reduced()
+    model = build_model(cfg)
+    rt = CPU_TEST
+    params, _ = split_params(model.init(jax.random.PRNGKey(1)))
+    rng = np.random.default_rng(1)
+    p1 = jnp.asarray(rng.integers(0, cfg.vocab_size, (1, 12)), jnp.int32)
+    p2 = jnp.asarray(rng.integers(0, cfg.vocab_size, (1, 12)), jnp.int32)
+    both = jnp.concatenate([p1, p2], axis=0)
+
+    def gen_tokens(prompt, steps=4):
+        cache, _ = split_params(model.init_cache(prompt.shape[0], 20))
+        out, _ = generate(model, params, {"tokens": prompt}, rt=rt,
+                          cache=cache, steps=steps)
+        return np.asarray(out)
+
+    joint = gen_tokens(both)
+    np.testing.assert_array_equal(joint[0], gen_tokens(p1)[0])
+    np.testing.assert_array_equal(joint[1], gen_tokens(p2)[0])
+
+
+def test_whisper_generate_runs():
+    cfg = get_config("whisper-base").reduced()
+    model = build_model(cfg)
+    rt = CPU_TEST
+    params, _ = split_params(model.init(jax.random.PRNGKey(0)))
+    B, S = 2, 8
+    rng = np.random.default_rng(0)
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32),
+        "encoder_embeds": jnp.asarray(
+            0.01 * rng.standard_normal((B, cfg.encoder_seq_len, cfg.d_model)),
+            jnp.float32),
+    }
+    cache, _ = split_params(model.init_cache(B, S + 4))
+    gen, _ = generate(model, params, batch, rt=rt, cache=cache, steps=4)
+    assert gen.shape == (B, 4)
+    assert (np.asarray(gen) >= 0).all()

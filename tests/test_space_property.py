@@ -1,0 +1,93 @@
+"""Hypothesis property tests for the search space + history invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import CatDim, History, IntDim, SearchSpace
+
+
+def space_strategy():
+    int_dim = st.builds(
+        lambda name, lo, span, step: IntDim(name, lo, lo + span * step, step),
+        st.just(""), st.integers(0, 10), st.integers(1, 12), st.integers(1, 10),
+    )
+    cat_dim = st.builds(
+        lambda name, n: CatDim(name, tuple(f"c{i}" for i in range(n))),
+        st.just(""), st.integers(2, 6),
+    )
+    def _name(dims):
+        return SearchSpace([
+            (IntDim(f"d{i}", d.lo, d.hi, d.step) if isinstance(d, IntDim)
+             else CatDim(f"d{i}", d.choices))
+            for i, d in enumerate(dims)
+        ])
+    return st.lists(st.one_of(int_dim, cat_dim), min_size=1, max_size=5).map(_name)
+
+
+@given(space=space_strategy(), seed=st.integers(0, 2**32 - 1))
+@settings(max_examples=60, deadline=None)
+def test_encode_decode_roundtrip(space, seed):
+    rng = np.random.default_rng(seed)
+    for p in space.sample(rng, 5):
+        assert space.validate(p)
+        u = space.encode(p)
+        assert np.all(u >= 0) and np.all(u <= 1)
+        assert space.decode(u) == p  # grid points roundtrip exactly
+
+
+@given(space=space_strategy(), data=st.data())
+@settings(max_examples=60, deadline=None)
+def test_decode_always_valid(space, data):
+    u = np.array([data.draw(st.floats(-0.5, 1.5)) for _ in range(space.n_dims)])
+    p = space.decode(u)
+    assert space.validate(p)
+
+
+@given(space=space_strategy(), seed=st.integers(0, 2**32 - 1))
+@settings(max_examples=40, deadline=None)
+def test_perturb_stays_on_grid(space, seed):
+    rng = np.random.default_rng(seed)
+    p = space.sample(rng, 1)[0]
+    for _ in range(10):
+        p = space.perturb(rng, p)
+        assert space.validate(p)
+
+
+@given(space=space_strategy(), seed=st.integers(0, 2**32 - 1),
+       n=st.integers(1, 30))
+@settings(max_examples=40, deadline=None)
+def test_history_invariants(space, seed, n):
+    rng = np.random.default_rng(seed)
+    h = History(space)
+    best = -np.inf
+    for i, p in enumerate(space.sample(rng, n)):
+        v = float(rng.standard_normal())
+        h.add(p, v)
+        best = max(best, v)
+        assert h.seen(p)
+    assert len(h) == n
+    assert h.best().value == best
+    curve = h.best_curve()
+    assert curve == sorted(curve)  # running best is monotone
+    # sampled range fractions are in [0, 1]
+    for frac in h.sampled_range_fraction().values():
+        assert -1e-9 <= frac <= 1 + 1e-9
+
+
+@given(space=space_strategy(), seed=st.integers(0, 2**32 - 1))
+@settings(max_examples=20, deadline=None)
+def test_history_json_roundtrip(tmp_path_factory, space, seed):
+    rng = np.random.default_rng(seed)
+    h = History(space)
+    for p in space.sample(rng, 7):
+        h.add(p, float(rng.standard_normal()))
+    path = tmp_path_factory.mktemp("hist") / "h.json"
+    h.save(path)
+    h2 = History.load(path, space)
+    assert h2.points() == h.points()
+    assert np.allclose(h2.values(), h.values())
+
+
+def test_lhs_covers_strata():
+    space = SearchSpace([IntDim("a", 0, 9, 1)])
+    pts = space.sample_lhs(np.random.default_rng(0), 10)
+    assert len({p["a"] for p in pts}) >= 8  # near-perfect stratification

@@ -1,0 +1,69 @@
+"""End-to-end system behaviour: train -> checkpoint -> restore -> serve,
+through the public launchers (the full paper pipeline on one box)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.configs import get_config
+from repro.data.pipeline import DataConfig
+from repro.models import build_model
+from repro.models.params import split_params
+from repro.models.runtime import Runtime
+from repro.optim.optimizer import OptimizerConfig
+from repro.serve.serve_step import generate
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def test_train_checkpoint_serve_roundtrip(tmp_path):
+    cfg = get_config("qwen2-0.5b").reduced()
+    rt = Runtime(compute_dtype="f32")
+    trainer = Trainer(
+        cfg,
+        OptimizerConfig(learning_rate=2e-3, warmup_steps=5, total_steps=40),
+        DataConfig(vocab_size=cfg.vocab_size, seq_len=48, global_batch=8),
+        TrainerConfig(steps=40, log_every=0, checkpoint_dir=str(tmp_path / "ck"),
+                      checkpoint_every=20),
+        rt=rt,
+    )
+    log = trainer.run()
+    assert log[-1]["loss"] < log[0]["loss"]
+
+    # restore the trained params into a fresh model and serve with them
+    model = build_model(cfg)
+    fresh, _ = split_params(model.init(jax.random.PRNGKey(7)))
+    ck = Checkpointer(str(tmp_path / "ck"))
+    restored, meta = ck.restore(None, {"params": fresh,
+                                       "opt": trainer.opt_state})
+    assert meta["step"] == 40
+    params = restored["params"]
+
+    rng = np.random.default_rng(0)
+    prompt = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 16)), jnp.int32)
+    cache, _ = split_params(model.init_cache(2, 32))
+    gen, _ = generate(model, params, {"tokens": prompt}, rt=rt, cache=cache,
+                      steps=8)
+    assert gen.shape == (2, 8)
+    first = np.asarray(gen[:, 0])
+    assert first.dtype == np.int32 and (first >= 0).all()
+
+
+def test_tuner_end_to_end_on_system(tmp_path):
+    """The paper pipeline: tune a real (measured) objective, resume it."""
+    from benchmarks.workloads import MEASURED_WORKLOADS, measured_make_step
+    from repro.core import SearchSpace, Tuner, TunerConfig
+    from repro.tuning.evaluator import WallClockEvaluator
+
+    w = MEASURED_WORKLOADS[4]  # ncf — cheapest measured workload
+    space = SearchSpace.from_dicts(w["space"])
+    obj = WallClockEvaluator(measured_make_step(w), warmup=1, iters=1)
+    ck = tmp_path / "tune.json"
+    t = Tuner(obj, space, TunerConfig(algorithm="bo", budget=6, seed=0,
+                                      verbose=False, checkpoint_path=str(ck)))
+    h1 = t.run()
+    assert len(h1) == 6 and np.isfinite(h1.best().value)
+    t2 = Tuner(obj, space, TunerConfig(algorithm="bo", budget=8, seed=0,
+                                       verbose=False, checkpoint_path=str(ck)))
+    h2 = t2.run()
+    assert len(h2) == 8
+    assert h2.points()[:6] == h1.points()
