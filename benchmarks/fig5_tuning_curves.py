@@ -24,7 +24,7 @@ ALGOS = ("bo", "ga", "nms")
 
 
 def run(measured: bool = False, budget: int = 50, seeds: int = 3,
-        emit=print):
+        parallelism: int = 1, emit=print):
     summary = {}
     for w in MEASURED_WORKLOADS:
         space = SearchSpace.from_dicts(w["space"])
@@ -39,8 +39,10 @@ def run(measured: bool = False, budget: int = 50, seeds: int = 3,
                     obj = surrogate_objective(w)
                 t = Tuner(obj, space,
                           TunerConfig(algorithm=algo, budget=budget,
-                                      seed=seed, verbose=False))
+                                      seed=seed, verbose=False,
+                                      parallelism=parallelism))
                 h = t.run()
+                t.close()
                 for it, best in enumerate(h.best_curve()):
                     emit(f"fig5,{w['name']},{algo},{seed},{it},{best:.4f}")
                 finals.append(h.best().value)
@@ -61,8 +63,11 @@ def main(argv=None):
     ap.add_argument("--measured", action="store_true")
     ap.add_argument("--budget", type=int, default=50)
     ap.add_argument("--seeds", type=int, default=3)
+    ap.add_argument("--parallelism", type=int, default=1,
+                    help="evaluation worker-pool width (batched ask/tell)")
     args = ap.parse_args(argv)
-    run(measured=args.measured, budget=args.budget, seeds=args.seeds)
+    run(measured=args.measured, budget=args.budget, seeds=args.seeds,
+        parallelism=args.parallelism)
 
 
 if __name__ == "__main__":

@@ -7,12 +7,21 @@ cell and emit the hypothesis -> change -> before/after log rows.
 Each variant is one hypothesis from the iteration loop (EXPERIMENTS.md
 §Perf); the driver re-lowers + re-analyzes the cell per variant and
 reports all three roofline terms + the dominant one.
+
+``--microbench`` runs the batched ask/tell throughput micro-benchmark
+instead: every engine tunes the same deterministic objective (with a
+simulated per-measurement cost) at parallelism 1 vs N, emitting
+
+    microbench,<algo>,<parallelism>,<best>,<wall_seconds>
+
+so the speedup of the parallel evaluation executor is directly visible.
 """
 from __future__ import annotations
 
 import argparse
 import json
 import pathlib
+import time
 
 from repro.tuning.parameters import BASELINE
 
@@ -104,13 +113,80 @@ def run(cell_key: str, emit=print, multi_pod: bool = False):
     return rows
 
 
+def run_microbench(budget: int = 24, parallelism: int = 4,
+                   eval_seconds: float = 0.05, emit=print):
+    """Batched ask/tell vs sequential loop on a deterministic objective.
+
+    The objective's value is a pure function of the point; the sleep
+    stands in for measurement cost (a real harness blocks on compile +
+    run, releasing the GIL, which is exactly what the thread-pool
+    executor overlaps).  Returns rows of
+    ``(algo, parallelism, best, seconds)``.
+    """
+    from repro.core import CatDim, IntDim, SearchSpace, Tuner, TunerConfig
+
+    def objective(p):
+        time.sleep(eval_seconds)
+        a, b, c = p["inter_op"], p["intra_op"], p["build"]
+        return float(50.0 * 2.718281828 ** (-((a - 11) / 5.0) ** 2)
+                     + 0.3 * b - 0.004 * (b - 25) ** 2 + 7.0 * c)
+
+    def make_space():
+        return SearchSpace([IntDim("inter_op", 1, 16),
+                            IntDim("intra_op", 0, 60, 5),
+                            CatDim("build", (1, 2, 3))])
+
+    rows = []
+    # same iteration budget: the executor should cut wall-clock ~par-fold
+    for algo in ["bo", "ga", "nms", "random", "exhaustive"]:
+        for par in (1, parallelism):
+            t = Tuner(objective, make_space(),
+                      TunerConfig(algorithm=algo, budget=budget, seed=0,
+                                  verbose=False, parallelism=par))
+            t0 = time.perf_counter()
+            h = t.run()
+            secs = time.perf_counter() - t0
+            t.close()
+            rows.append({"mode": "iteration_budget", "algo": algo,
+                         "parallelism": par, "best": h.best().value,
+                         "seconds": secs})
+            emit(f"microbench,{algo},{par},{h.best().value:.4f},{secs:.3f}")
+    # same wall-clock budget (the real production constraint): the parallel
+    # executor measures ~par times more configurations in the same seconds
+    wall = budget * eval_seconds / 2
+    for algo in ["bo", "ga", "nms", "random"]:
+        for par in (1, parallelism):
+            t = Tuner(objective, make_space(),
+                      TunerConfig(algorithm=algo, budget=10**9, seed=0,
+                                  verbose=False, parallelism=par,
+                                  wall_clock_budget=wall))
+            h = t.run()
+            t.close()
+            rows.append({"mode": "wall_clock_budget", "algo": algo,
+                         "parallelism": par, "best": h.best().value,
+                         "n_evals": len(h), "wall_clock_s": wall})
+            emit(f"microbench_wallclock,{algo},{par},"
+                 f"{h.best().value:.4f},{len(h)}")
+    return rows
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--cell", choices=sorted(CELLS), required=True)
+    ap.add_argument("--cell", choices=sorted(CELLS))
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--out", default=None)
+    ap.add_argument("--microbench", action="store_true",
+                    help="run the ask/tell parallel-executor micro-benchmark")
+    ap.add_argument("--parallelism", type=int, default=4)
+    ap.add_argument("--budget", type=int, default=24)
     args = ap.parse_args(argv)
-    rows = run(args.cell, multi_pod=args.multi_pod)
+    if args.microbench:
+        rows = run_microbench(budget=args.budget,
+                              parallelism=args.parallelism)
+    else:
+        if not args.cell:
+            ap.error("--cell is required unless --microbench is given")
+        rows = run(args.cell, multi_pod=args.multi_pod)
     if args.out:
         p = pathlib.Path(args.out)
         p.parent.mkdir(parents=True, exist_ok=True)

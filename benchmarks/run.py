@@ -18,6 +18,9 @@ def main(argv=None):
                     help="smaller budgets/seeds for CI")
     ap.add_argument("--measured", action="store_true",
                     help="fig5 measures real wall-clock configurations")
+    ap.add_argument("--parallelism", type=int, default=1,
+                    help="evaluation worker-pool width for the tuning "
+                         "sections (batched ask/tell executor)")
     args = ap.parse_args(argv)
 
     from benchmarks import fig5_tuning_curves, fig6_exhaustive, roofline, table2_exploration
@@ -26,7 +29,8 @@ def main(argv=None):
     seeds = 2 if args.fast else 3
 
     t0 = time.perf_counter()
-    fig5_tuning_curves.run(measured=args.measured, budget=budget, seeds=seeds)
+    fig5_tuning_curves.run(measured=args.measured, budget=budget, seeds=seeds,
+                           parallelism=args.parallelism)
     print(f"# fig5 done in {time.perf_counter()-t0:.1f}s")
 
     t0 = time.perf_counter()

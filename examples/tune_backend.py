@@ -3,11 +3,25 @@ the roofline objective — the paper's methodology pointed at the 256-chip
 mesh (each evaluation lowers + compiles the cell).
 
     PYTHONPATH=src python examples/tune_backend.py \
-        [--arch qwen3-moe-30b-a3b] [--shape train_4k] [--budget 12]
+        [--arch qwen3-moe-30b-a3b] [--shape train_4k] [--budget 12] \
+        [--parallelism 4] [--wall-clock 600]
 
-NOTE: every evaluation is a real XLA compile (~30-90 s on this CPU), so
-the default budget is small; `python -m repro.launch.tune` is the full
-50-iteration driver used for EXPERIMENTS.md §Perf.
+How it runs (batched ask/tell):
+
+* the engine is **asked** for ``--parallelism`` candidate points per
+  round (``engine.ask(n, history)``), the parallel executor compiles
+  them concurrently (XLA releases the GIL, so the thread pool overlaps
+  the ~30-90 s compiles), and the results are **told** back
+  (``engine.tell(points, values)``);
+* a crashed or OOM configuration scores ``-inf`` without killing the
+  worker pool, and ``--wall-clock`` lets you budget by seconds instead
+  of iteration count — with a small budget of real compiles, wall-clock
+  budgeting is usually what you want;
+* ``--parallelism 1`` (default) is the paper-faithful sequential loop.
+
+`python -m repro.launch.tune` is the full 50-iteration driver used for
+EXPERIMENTS.md §Perf; it exposes the same knobs plus --eval-timeout and
+--executor-backend.
 """
 import argparse
 
@@ -20,12 +34,18 @@ def main():
     ap.add_argument("--shape", default="train_4k")
     ap.add_argument("--budget", type=int, default=12)
     ap.add_argument("--algo", default="bo")
+    ap.add_argument("--parallelism", type=int, default=1)
+    ap.add_argument("--wall-clock", type=float, default=None)
     args = ap.parse_args()
-    tune_main([
+    argv = [
         "--arch", args.arch, "--shape", args.shape, "--algo", args.algo,
         "--budget", str(args.budget),
+        "--parallelism", str(args.parallelism),
         "--cache", "artifacts/tune_cache.json",
-    ])
+    ]
+    if args.wall_clock is not None:
+        argv += ["--wall-clock", str(args.wall_clock)]
+    tune_main(argv)
 
 
 if __name__ == "__main__":

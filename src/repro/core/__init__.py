@@ -1,6 +1,13 @@
 """The paper's primary contribution: gradient-free auto-tuning of backend
 parameters for training/inference throughput — BO (GP + SMSego), GA, and
-Nelder-Mead simplex behind a common engine interface (paper Fig. 4)."""
+Nelder-Mead simplex behind a common engine interface (paper Fig. 4).
+
+Engines speak the batched ask/tell contract (``engine.ask(n, history)``
+-> deduplicated candidate batch; ``engine.tell(points, values)`` feeds
+results back) and the :class:`Tuner` drives them through a parallel
+evaluation executor (``repro.tuning.executor``) under an iteration
+budget, a wall-clock budget, or both.  ``parallelism=1`` reproduces the
+paper's sequential one-point-per-iteration harness bit-for-bit."""
 from repro.core.bayesopt import BayesOpt
 from repro.core.engine import Engine
 from repro.core.exhaustive import Exhaustive

@@ -12,11 +12,16 @@ Acquisitions:
 
 The candidate set is the full grid when small, otherwise random samples
 plus local perturbations of the incumbent (exploitation neighborhood).
+
+``ask(n, ...)`` fits the surrogate once and returns the top-n candidates
+by acquisition value (deduplicated, unseen), so a parallel executor can
+measure a whole acquisition batch per GP fit; ``ask(1, ...)`` selects
+exactly the argmax the single-point path always did.
 """
 from __future__ import annotations
 
 import math
-from typing import Dict
+from typing import Dict, List
 
 import numpy as np
 
@@ -77,16 +82,31 @@ class BayesOpt(Engine):
                 out.append(c)
         return out or cands
 
-    def suggest(self, history: History) -> Dict:
+    def ask(self, n: int, history: History) -> List[Dict]:
         if self._init_points is None:
             self._init_points = self.space.sample_lhs(self.rng, self.n_init)
-        if len(history) < self.n_init:
-            return self._unseen(history, self._init_points[len(history)])
+        batch: List[Dict] = []
+        keys = set()
+
+        def emit(point: Dict) -> None:
+            keys.add(self.space.key(point))
+            batch.append(point)
+
+        # LHS init phase (possibly only the head of the batch)
+        while (len(batch) < n
+               and len(history) + history.n_pending() + len(batch) < self.n_init):
+            idx = len(history) + history.n_pending() + len(batch)
+            emit(self._unseen(history, self._init_points[idx], exclude=keys))
+        if len(batch) == n:
+            return batch
 
         X, y = history.encoded()
         finite = np.isfinite(y)
         if finite.sum() < 2:
-            return self._unseen(history, self.space.sample(self.rng, 1)[0])
+            while len(batch) < n:
+                emit(self._unseen(history, self.space.sample(self.rng, 1)[0],
+                                  exclude=keys))
+            return batch
         # failed configs (OOM etc.) get the worst finite value (pessimism)
         y = np.where(finite, y, y[finite].min())
 
@@ -112,4 +132,17 @@ class BayesOpt(Engine):
         else:
             raise ValueError(self.acquisition)
 
-        return dict(cands[int(np.argmax(acq))])
+        # top-n by acquisition; stable sort so n=1 picks np.argmax's candidate
+        for i in np.argsort(-acq, kind="stable"):
+            if len(batch) == n:
+                break
+            c = cands[int(i)]
+            k = self.space.key(c)
+            if k in keys or (len(batch) > 0 and
+                             (history.seen(c) or history.pending(c))):
+                continue
+            emit(dict(c))
+        while len(batch) < n:  # candidate set exhausted: random fill
+            emit(self._unseen(history, self.space.sample(self.rng, 1)[0],
+                              exclude=keys))
+        return batch

@@ -1,8 +1,31 @@
 """Algorithm-engine interface (paper Fig. 4: algorithmic engines behind a
-selection switch, all sharing the same history / system-under-test path)."""
+selection switch, all sharing the same history / system-under-test path).
+
+Batched ask/tell contract
+-------------------------
+
+Engines expose two methods:
+
+* ``ask(n, history) -> list[point]`` — propose up to ``n`` deduplicated
+  candidate points.  The batch excludes points already evaluated
+  (``history.seen``) and points currently in flight
+  (``history.pending``), so a parallel executor can measure the whole
+  batch concurrently without wasted repeats.
+* ``tell(points, values)`` — report measured objective values back, in
+  the same order the points were proposed.  The default implementation
+  forwards each pair to ``observe`` (the single-point state update),
+  which is what most engines need; engines with speculative batches
+  (Nelder-Mead) override it.
+
+``ask(1, ...)`` is guaranteed to consume the engine RNG exactly like the
+historical single-point ``suggest`` did, so a sequential driver
+(``parallelism=1``) reproduces the pre-batching suggestion trace
+bit-for-bit for the same seed.  ``suggest`` remains as a thin
+compatibility wrapper over ``ask(1, ...)``.
+"""
 from __future__ import annotations
 
-from typing import Dict, Optional
+from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
@@ -17,23 +40,46 @@ class Engine:
         self.space = space
         self.rng = np.random.default_rng(seed)
 
-    def suggest(self, history: History) -> Dict:
+    # -- batched contract -----------------------------------------------------
+    def ask(self, n: int, history: History) -> List[Dict]:
+        """Propose up to ``n`` deduplicated candidate points."""
         raise NotImplementedError
+
+    def tell(self, points: Sequence[Dict], values: Sequence[float]) -> None:
+        """Report objective values for a previously asked batch (in order)."""
+        for p, v in zip(points, values):
+            self.observe(p, v)
+
+    # -- single-point compatibility shims ------------------------------------
+    def suggest(self, history: History) -> Dict:
+        """Deprecated single-point API; equivalent to ``ask(1, ...)[0]``."""
+        return self.ask(1, history)[0]
 
     def observe(self, point: Dict, value: float) -> None:  # optional state
         pass
 
     # -- helpers -------------------------------------------------------------
-    def _unseen(self, history: History, point: Dict, tries: int = 64) -> Dict:
-        """Nudge a suggestion off already-evaluated grid points."""
+    def _unseen(self, history: History, point: Dict, tries: int = 64,
+                exclude: Optional[Set[Tuple]] = None) -> Dict:
+        """Nudge a suggestion off already-evaluated / in-flight grid points.
+
+        ``exclude`` carries the keys of points already emitted in the
+        current batch so one ``ask`` never proposes duplicates.
+        """
+        exclude = exclude or set()
+
+        def taken(p: Dict) -> bool:
+            return (history.seen(p) or history.pending(p)
+                    or self.space.key(p) in exclude)
+
         cand = point
         for radius in [1, 1, 2, 2, 3, 4] * (tries // 6 + 1):
-            if not history.seen(cand):
+            if not taken(cand):
                 return cand
             cand = self.space.perturb(self.rng, cand, radius=radius)
         # grid may be nearly exhausted: fall back to random
         for _ in range(tries):
             cand = self.space.sample(self.rng, 1)[0]
-            if not history.seen(cand):
+            if not taken(cand):
                 return cand
         return cand

@@ -1,7 +1,7 @@
 """Exhaustive grid sweep (paper §4.3 Fig. 6 + the §1 cost argument)."""
 from __future__ import annotations
 
-from typing import Dict, Iterator
+from typing import Dict, Iterator, List
 
 from repro.core.engine import Engine
 from repro.core.history import History
@@ -15,5 +15,11 @@ class Exhaustive(Engine):
         super().__init__(space, seed)
         self._it: Iterator[Dict] = space.enumerate()
 
-    def suggest(self, history: History) -> Dict:
-        return next(self._it)
+    def ask(self, n: int, history: History) -> List[Dict]:
+        batch: List[Dict] = []
+        for _ in range(n):
+            try:
+                batch.append(next(self._it))
+            except StopIteration:
+                break  # grid exhausted; [] tells the tuner to stop cleanly
+        return batch

@@ -5,10 +5,14 @@ reordered by a fitness function, the inputs of the two fittest pairs are
 selected as parents, a child is produced by *crossover* (each component
 copied from one of the two parents) and *mutation* (components flipped to
 purely random values with small probability).
+
+``ask(n, ...)`` emits a *generation*: n distinct children bred from the
+current two fittest parents, which is the natural unit of parallel
+measurement for a GA.
 """
 from __future__ import annotations
 
-from typing import Dict
+from typing import Dict, List
 
 import numpy as np
 
@@ -50,17 +54,7 @@ class GeneticAlgorithm(Engine):
             return pick().point, pick().point
         return order[0].point, order[1].point
 
-    def suggest(self, history: History) -> Dict:
-        if self._init_points is None:
-            self._init_points = self.space.sample_lhs(self.rng, self.n_init)
-        if len(history) < self.n_init:
-            return self._unseen(history, self._init_points[len(history)])
-
-        parents = self._select_parents(history)
-        if parents is None:
-            return self._unseen(history, self.space.sample(self.rng, 1)[0])
-        pa, pb = parents
-
+    def _breed(self, pa: Dict, pb: Dict) -> Dict:
         child = {}
         for d in self.space.dims:
             # crossover: copy the component from one of the two parents
@@ -68,4 +62,25 @@ class GeneticAlgorithm(Engine):
             # mutation: occasionally a purely random value
             if self.rng.random() < self.mutation_rate:
                 child[d.name] = d.values[self.rng.integers(len(d.values))]
-        return self._unseen(history, child)
+        return child
+
+    def ask(self, n: int, history: History) -> List[Dict]:
+        if self._init_points is None:
+            self._init_points = self.space.sample_lhs(self.rng, self.n_init)
+        batch: List[Dict] = []
+        keys = set()
+        while len(batch) < n:
+            idx = len(history) + history.n_pending() + len(batch)
+            if idx < self.n_init:
+                p = self._unseen(history, self._init_points[idx], exclude=keys)
+            else:
+                parents = self._select_parents(history)
+                if parents is None:
+                    p = self._unseen(history, self.space.sample(self.rng, 1)[0],
+                                     exclude=keys)
+                else:
+                    p = self._unseen(history, self._breed(*parents),
+                                     exclude=keys)
+            keys.add(self.space.key(p))
+            batch.append(p)
+        return batch

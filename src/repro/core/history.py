@@ -3,6 +3,12 @@
 The history is the single source of truth shared by every algorithm
 engine (paper Fig. 4: common data-acquisition module).  It also implements
 the paper's Table-2 analysis: per-parameter sampled-range coverage.
+
+Batched evaluation support: ``mark_inflight``/``clear_inflight`` track
+points handed to the parallel executor but not yet measured, so engines
+never re-propose them (``pending``) and a checkpoint written mid-batch
+(``save`` persists completed evaluations only) stays consistent —
+resuming simply re-evaluates whatever was still in flight.
 """
 from __future__ import annotations
 
@@ -32,6 +38,7 @@ class History:
         self.space = space
         self.evals: List[Evaluation] = []
         self._by_key: Dict[Tuple, Evaluation] = {}
+        self._inflight: set = set()
 
     def __len__(self) -> int:
         return len(self.evals)
@@ -41,8 +48,38 @@ class History:
         ev = Evaluation(dict(point), float(value), len(self.evals),
                         cost_seconds, meta or {})
         self.evals.append(ev)
-        self._by_key[self.space.key(point)] = ev
+        key = self.space.key(point)
+        self._by_key[key] = ev
+        self._inflight.discard(key)
         return ev
+
+    def add_batch(self, points: List[Dict], values: List[float],
+                  costs: Optional[List[float]] = None,
+                  metas: Optional[List[dict]] = None) -> List[Evaluation]:
+        """Append a completed batch (in submission order)."""
+        costs = costs or [0.0] * len(points)
+        metas = metas or [None] * len(points)
+        return [self.add(p, v, c, m)
+                for p, v, c, m in zip(points, values, costs, metas)]
+
+    # -- in-flight bookkeeping (parallel executor) ---------------------------
+    def mark_inflight(self, points: List[Dict]) -> None:
+        for p in points:
+            self._inflight.add(self.space.key(p))
+
+    def clear_inflight(self, points: Optional[List[Dict]] = None) -> None:
+        if points is None:
+            self._inflight.clear()
+        else:
+            for p in points:
+                self._inflight.discard(self.space.key(p))
+
+    def pending(self, point: Dict) -> bool:
+        """True while the point is submitted but not yet measured."""
+        return self.space.key(point) in self._inflight
+
+    def n_pending(self) -> int:
+        return len(self._inflight)
 
     def lookup(self, point: Dict) -> Optional[Evaluation]:
         return self._by_key.get(self.space.key(point))

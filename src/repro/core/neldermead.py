@@ -3,14 +3,22 @@ TensorTuner's algorithm).
 
 Standard reflection / expansion / contraction / shrink in the unit-cube
 encoding, with every probe snapped to the grid.  The engine is a state
-machine driven by ``suggest``/``observe`` so it plugs into the same
-iteration loop as BO and GA; NMS's known failure mode — clustering around
-local optima and never touching parameter-range extremes — is exactly
-what the paper's Table 2 measures.
+machine driven by ``ask``/``tell`` so it plugs into the same iteration
+loop as BO and GA; NMS's known failure mode — clustering around local
+optima and never touching parameter-range extremes — is exactly what the
+paper's Table 2 measures.
+
+Batching: NMS is inherently sequential, so ``ask(n>1, ...)`` pads the
+primary probe with *speculative* candidates — the expansion and both
+contraction probes that would follow a reflection, or the whole
+precomputed shrink queue.  ``tell`` replays results through the state
+machine in order, consuming any speculatively measured probe the
+transition actually lands on; unconsumed extras are simply left in the
+history (and are free on re-ask via the tuner's memoization).
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -49,13 +57,62 @@ class NelderMead(Engine):
         pts = [x for x, _ in self._simplex[:-1]]
         return np.mean(pts, axis=0)
 
-    def suggest(self, history: History) -> Dict:
+    def _primary(self) -> Dict:
+        """The one point the state machine needs next."""
         if self._phase == "init":
-            x = self._pending[len(self._simplex)]
-            return self.space.decode(x)
+            return self.space.decode(self._pending[len(self._simplex)])
         if self._phase in ("reflect", "expand", "contract", "shrink"):
             return self.space.decode(self._xprobe)
         raise RuntimeError(self._phase)
+
+    def ask(self, n: int, history: History) -> List[Dict]:
+        if self._phase == "init":
+            # the remaining simplex vertices are a natural batch
+            lo = len(self._simplex)
+            hi = min(lo + n, len(self._pending))
+            batch, keys = [], set()
+            for x in self._pending[lo:hi]:
+                p = self.space.decode(x)
+                k = self.space.key(p)
+                if k not in keys:  # distinct vertices may snap to one cell
+                    keys.add(k)
+                    batch.append(p)
+            return batch
+
+        primary = self._primary()
+        batch = [primary]
+        keys = {self.space.key(primary)}
+
+        def spec(x: np.ndarray) -> None:
+            p = self.space.decode(x)
+            k = self.space.key(p)
+            if k not in keys:
+                keys.add(k)
+                batch.append(p)
+
+        if self._phase == "reflect" and n > 1 and len(self._simplex) >= 2:
+            # speculate on every outcome of the reflection step
+            xc = self._centroid()
+            xr = self.space.encode(primary)  # grid-snapped reflection point
+            spec(np.clip(xc + GAMMA * (xr - xc), 0, 1))        # expansion
+            spec(np.clip(xc + RHO * (xr - xc), 0, 1))          # outside contraction
+            spec(np.clip(xc + RHO * (self._simplex[-1][0] - xc), 0, 1))  # inside
+        elif self._phase == "shrink":
+            for x in self._shrink_queue:  # precomputed: measure them all
+                spec(x)
+        return batch[:n]
+
+    def tell(self, points: Sequence[Dict], values: Sequence[float]) -> None:
+        avail = {}
+        for p, v in zip(points, values):
+            avail.setdefault(self.space.key(p), (p, v))
+        while avail:
+            exp = self._primary()
+            k = self.space.key(exp)
+            if k not in avail:
+                break  # speculation missed; leftovers stay memoized in history
+            p, v = avail.pop(k)
+            self.observe(p, v)
 
     def observe(self, point: Dict, value: float) -> None:
         if not np.isfinite(value):

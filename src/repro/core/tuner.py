@@ -1,10 +1,19 @@
-"""Tuner orchestrator (paper Fig. 4).
+"""Tuner orchestrator (paper Fig. 4), batched ask/tell edition.
 
-Algorithm-selection switch + iteration budget (paper: 50) + memoized
-objective + checkpoint/resume.  The objective maps a point (dict of
-backend-parameter values) to a throughput (higher is better); failures
-(OOM, compile error) surface as -inf and are recorded, mirroring how a
-real measurement harness handles a crashed configuration.
+Algorithm-selection switch + iteration budget (paper: 50) **or**
+wall-clock budget + memoized objective + checkpoint/resume.  Each round
+the engine is *asked* for a batch of candidate points, the batch is
+measured by the parallel :class:`EvaluationExecutor`, and the results
+are *told* back — so the measurement side saturates ``parallelism``
+workers while the engine thinks once per batch.
+
+``parallelism=1`` (the default) uses the serial executor with batch size
+1 and reproduces the historical one-point-per-iteration loop bit-for-bit
+for the same seed.  Objectives follow the explicit evaluator protocol
+(``(value, meta)``; see ``repro.tuning.objective``); plain scalar
+callables are adapted automatically.  Failures (OOM, compile error,
+timeout) surface as ``-inf`` and are recorded, mirroring how a real
+measurement harness handles a crashed configuration.
 """
 from __future__ import annotations
 
@@ -12,7 +21,7 @@ import math
 import pathlib
 import time
 from dataclasses import dataclass, field
-from typing import Callable, Dict, Optional
+from typing import Callable, Dict, List, Optional
 
 from repro.core.bayesopt import BayesOpt
 from repro.core.engine import Engine
@@ -22,6 +31,8 @@ from repro.core.history import History
 from repro.core.neldermead import NelderMead
 from repro.core.random_search import RandomSearch
 from repro.core.space import SearchSpace
+from repro.tuning.executor import EvalResult, EvaluationExecutor
+from repro.tuning.objective import as_evaluator
 
 ENGINES = {
     "bo": BayesOpt,
@@ -40,6 +51,12 @@ class TunerConfig:
     checkpoint_path: Optional[str] = None
     engine_kwargs: dict = field(default_factory=dict)
     verbose: bool = True
+    # -- batched evaluation --------------------------------------------------
+    parallelism: int = 1  # worker-pool width; 1 == historical sequential loop
+    batch_size: Optional[int] = None  # points per ask; default: parallelism
+    executor_backend: Optional[str] = None  # serial|thread|process (auto)
+    eval_timeout: Optional[float] = None  # seconds per evaluation; -inf past it
+    wall_clock_budget: Optional[float] = None  # seconds; stops between batches
 
 
 class Tuner:
@@ -49,7 +66,7 @@ class Tuner:
         space: SearchSpace,
         config: TunerConfig = TunerConfig(),
     ):
-        self.objective = objective
+        self.objective = as_evaluator(objective)
         self.space = space
         self.config = config
         if config.algorithm not in ENGINES:
@@ -59,49 +76,94 @@ class Tuner:
         self.engine: Engine = ENGINES[config.algorithm](
             space, seed=config.seed, **config.engine_kwargs
         )
+        self.executor = EvaluationExecutor(
+            self.objective, space,
+            parallelism=config.parallelism,
+            backend=config.executor_backend,
+            timeout=config.eval_timeout,
+        )
         self.history = History(space)
         if config.checkpoint_path and pathlib.Path(config.checkpoint_path).exists():
             self._resume(config.checkpoint_path)
 
     def _resume(self, path: str) -> None:
-        """Fault tolerance: reload history + replay it into the engine."""
+        """Fault tolerance: reload history + replay it into the engine.
+
+        A checkpoint only ever contains completed evaluations (in-flight
+        points are excluded from ``History.save``), so resuming mid-batch
+        simply re-evaluates whatever had not finished.
+
+        Replay goes through ``tell`` (one call with the whole trace), not
+        raw per-point ``observe``: engines with speculative batches
+        (Nelder-Mead) consume only the points their state machine actually
+        asked for, in order — feeding unconsumed speculative probes into
+        ``observe`` would corrupt the state machine.
+        """
         loaded = History.load(path, self.space)
         for ev in loaded.evals:
             self.history.add(ev.point, ev.value, ev.cost_seconds, ev.meta)
-            self.engine.observe(ev.point, ev.value)
+        self.engine.tell([ev.point for ev in loaded.evals],
+                         [ev.value for ev in loaded.evals])
         if self.config.verbose and len(loaded):
             print(f"[tuner] resumed {len(loaded)} evaluations from {path}")
 
-    def _evaluate(self, point: Dict) -> (float, float, dict):
-        cached = self.history.lookup(point)
-        if cached is not None:  # memoized repeat query (engines may revisit)
-            return cached.value, 0.0, {"memoized": True}
-        t0 = time.time()
-        try:
-            value = self.objective(point)
-            meta = {}
-            if isinstance(value, tuple):
-                value, meta = value
-            value = float(value)
-        except Exception as e:  # failed configuration = worst outcome
-            value, meta = -math.inf, {"error": repr(e)}
-        return value, time.time() - t0, meta
+    def _evaluate_batch(self, points: List[Dict]) -> List[EvalResult]:
+        """History-memoized repeats are free; the rest go to the executor."""
+        results: List[Optional[EvalResult]] = [None] * len(points)
+        miss_idx, miss_points = [], []
+        for i, p in enumerate(points):
+            cached = self.history.lookup(p)
+            if cached is not None:  # memoized repeat query (engines may revisit)
+                results[i] = EvalResult(dict(p), cached.value, 0.0,
+                                        {"memoized": True})
+            else:
+                miss_idx.append(i)
+                miss_points.append(p)
+        if miss_points:
+            for i, r in zip(miss_idx, self.executor.evaluate(miss_points)):
+                results[i] = r
+        return results
 
-    def run(self, budget: Optional[int] = None) -> History:
+    def run(self, budget: Optional[int] = None,
+            wall_clock: Optional[float] = None) -> History:
         budget = budget if budget is not None else self.config.budget
+        wall_clock = (wall_clock if wall_clock is not None
+                      else self.config.wall_clock_budget)
+        batch_size = self.config.batch_size or max(1, self.config.parallelism)
+        t_start = time.time()
         while len(self.history) < budget:
-            point = self.engine.suggest(self.history)
-            value, secs, meta = self._evaluate(point)
-            self.engine.observe(point, value)
-            self.history.add(point, value, secs, meta)
+            if wall_clock is not None and time.time() - t_start >= wall_clock:
+                if self.config.verbose:
+                    print(f"[tuner:{self.engine.name}] wall-clock budget "
+                          f"({wall_clock:.1f}s) exhausted at "
+                          f"{len(self.history)} evaluations")
+                break
+            points = self.engine.ask(
+                min(batch_size, budget - len(self.history)), self.history)
+            if not points:
+                break  # engine has nothing left to propose
+            self.history.mark_inflight(points)
+            try:
+                results = self._evaluate_batch(points)
+            finally:
+                self.history.clear_inflight(points)
+            self.engine.tell(points, [r.value for r in results])
+            self.history.add_batch(
+                points, [r.value for r in results],
+                [r.cost_seconds for r in results], [r.meta for r in results])
             if self.config.checkpoint_path:
                 self.history.save(self.config.checkpoint_path)
             if self.config.verbose:
                 best = (self.history.best().value
                         if any(math.isfinite(e.value) for e in self.history.evals)
                         else float("nan"))
-                print(
-                    f"[tuner:{self.engine.name}] it={len(self.history):3d} "
-                    f"y={value:.4g} best={best:.4g} ({secs:.1f}s) {point}"
-                )
+                for r in results:
+                    print(
+                        f"[tuner:{self.engine.name}] it={len(self.history):3d} "
+                        f"y={r.value:.4g} best={best:.4g} "
+                        f"({r.cost_seconds:.1f}s) {r.point}"
+                    )
         return self.history
+
+    def close(self) -> None:
+        self.executor.close()

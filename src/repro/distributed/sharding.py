@@ -78,7 +78,9 @@ class ShardingRules:
                     if not (set(flat) & used):
                         size = self._axis_size(cand)
                         if shape is None or shape[i] % size == 0:
-                            assignment = cand
+                            # bare name for single axes: P("data"), not
+                            # P(("data",)) — newer jax treats them as distinct
+                            assignment = flat[0] if len(flat) == 1 else cand
                             used.update(flat)
             out.append(assignment)
         while out and out[-1] is None:

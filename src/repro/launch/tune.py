@@ -5,15 +5,24 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
 """The paper's tuning framework applied to this framework's own backend.
 
     PYTHONPATH=src python -m repro.launch.tune --arch qwen3-moe-30b-a3b \
-        --shape train_4k --algo bo --budget 50 --out artifacts/tune_moe.json
+        --shape train_4k --algo bo --budget 50 --out artifacts/tune_moe.json \
+        --parallelism 4 --wall-clock 1800
 
 Each evaluation lowers+compiles the (arch x shape) cell on the production
 mesh with the candidate BackendConfig and returns roofline throughput;
 OOM configurations fail (-inf) like crashed measurements in the paper.
 This driver is also the §Perf hillclimbing engine.
+
+Batched evaluation: engines are *asked* for ``--parallelism`` candidates
+per round and the executor compiles them concurrently (XLA compilation
+releases the GIL, so the default thread backend scales).  ``--wall-clock``
+caps tuning by seconds instead of / in addition to iterations, and
+``--eval-timeout`` scores any configuration that compiles for too long
+as a failure instead of stalling the run.
 """
 import argparse
 import json
+import math
 import pathlib
 
 from repro.configs import get_config
@@ -26,13 +35,25 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--shape", default="train_4k")
-    ap.add_argument("--algo", default="bo", choices=["bo", "ga", "nms", "random"])
+    ap.add_argument("--algo", default="bo",
+                    choices=["bo", "ga", "nms", "random", "exhaustive"])
     ap.add_argument("--budget", type=int, default=50)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--out", default=None)
     ap.add_argument("--cache", default=None,
                     help="JSON cache of compiled evaluations (shared across algos)")
+    ap.add_argument("--parallelism", type=int, default=1,
+                    help="evaluation worker-pool width (1 = sequential loop)")
+    ap.add_argument("--executor-backend", default=None,
+                    choices=["serial", "thread", "process"],
+                    help="worker-pool backend (default: serial for "
+                         "parallelism 1, else thread)")
+    ap.add_argument("--eval-timeout", type=float, default=None,
+                    help="seconds per evaluation before it scores -inf")
+    ap.add_argument("--wall-clock", type=float, default=None,
+                    help="stop tuning after this many seconds (wall-clock "
+                         "budget mode; combines with --budget)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -47,9 +68,22 @@ def main(argv=None):
     tuner = Tuner(
         evaluator, space,
         TunerConfig(algorithm=args.algo, budget=args.budget, seed=args.seed,
-                    checkpoint_path=ckpt),
+                    checkpoint_path=ckpt,
+                    parallelism=args.parallelism,
+                    executor_backend=args.executor_backend,
+                    eval_timeout=args.eval_timeout,
+                    wall_clock_budget=args.wall_clock),
     )
     history = tuner.run()
+    tuner.close()
+    if not any(math.isfinite(e.value) for e in history.evals):
+        print(f"[tune] no successful evaluations "
+              f"({len(history)} run, all failed or budget expired first)")
+        if args.out:
+            out = pathlib.Path(args.out)
+            out.parent.mkdir(parents=True, exist_ok=True)
+            out.write_text(history.to_json())
+        return history
     best = history.best()
     print(f"[tune] best throughput {best.value:.4g} tok/s at {best.point}")
     print(f"[tune] backend config: {config_from_point(best.point, BASELINE)}")

@@ -9,8 +9,10 @@
   configuration whose per-device footprint exceeds HBM is a *failed run*
   (-inf), exactly like a crashed measurement in the paper's harness.
 
-Both are plain callables point->(value, meta) so every engine sees the
-same interface.
+Both implement the explicit evaluator protocol
+(``repro.tuning.objective.Evaluator``): ``__call__(point) -> (value,
+meta)``, declared via ``returns_meta = True`` so the tuner/executor never
+have to sniff return types.
 """
 from __future__ import annotations
 
@@ -24,10 +26,11 @@ import jax
 import numpy as np
 
 from repro.tuning.cost_model import HBM_BYTES
+from repro.tuning.objective import Evaluator
 from repro.tuning.parameters import BASELINE, BackendConfig, config_from_point
 
 
-class RooflineEvaluator:
+class RooflineEvaluator(Evaluator):
     def __init__(
         self,
         arch: str,
@@ -80,7 +83,7 @@ class RooflineEvaluator:
         return float(rec["roofline"]["throughput_tok_s"]), meta
 
 
-class WallClockEvaluator:
+class WallClockEvaluator(Evaluator):
     """Measured throughput of a step built from the configuration point.
 
     ``make_step(point) -> (step_fn, args, examples_per_step)``:

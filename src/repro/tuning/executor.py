@@ -1,0 +1,217 @@
+"""Parallel evaluation executor — the measurement side of ask/tell.
+
+The tuner asks an engine for a batch of candidate points and hands the
+batch here.  The executor runs the objective over a worker pool with:
+
+* **failure isolation** — an objective that raises scores ``-inf`` (the
+  paper's failed-run semantics for OOM/compile crashes) and the pool
+  survives;
+* **per-evaluation timeout** — a configuration that exceeds ``timeout``
+  seconds scores ``-inf`` with ``meta={"timeout": True}``.  The stuck
+  worker is abandoned, not joined, so the batch still completes.  The
+  clock starts at batch dispatch; a task still queued when its wait
+  expires is cancelled and measured inline instead of being falsely
+  recorded as a failure;
+* **shared memo cache** — completed evaluations (including failures and
+  timeouts) are memoized by grid key, so repeated queries across batches
+  are free when the executor is used standalone or shared between
+  drivers.  (Inside a :class:`~repro.core.tuner.Tuner`, the history
+  already memoizes repeats before they reach the executor; this cache is
+  the executor's own guarantee, not the tuner's.)  With the process
+  backend it is backed by a ``multiprocessing.Manager`` dict, making it
+  safe to share across processes;
+* **deterministic ordering** — results come back in submission order
+  regardless of completion order, so engine ``tell`` and the history
+  stay reproducible.
+
+Backends:
+
+* ``"serial"`` — in-process, zero pool overhead.  ``parallelism=1``
+  without a timeout defaults to this and reproduces the pre-batching
+  sequential trace bit-for-bit.  (With a timeout set, the default is a
+  1-worker thread pool, since only a pool can bound a running
+  evaluation; the serial backend merely flags overruns after the fact.)
+* ``"thread"`` — default for ``parallelism>1``.  Objectives that release
+  the GIL (XLA compile/execute, subprocess measurement harnesses, any
+  native code) scale; closures and unpicklable objectives all work.
+* ``"process"`` — true CPU parallelism for picklable objectives.
+"""
+from __future__ import annotations
+
+import math
+import threading
+import time
+from concurrent.futures import (
+    ProcessPoolExecutor,
+    ThreadPoolExecutor,
+)
+from concurrent.futures import TimeoutError as FutureTimeoutError
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+from repro.core.space import SearchSpace
+from repro.tuning.objective import Evaluator, as_evaluator
+
+BACKENDS = ("serial", "thread", "process")
+
+
+@dataclass
+class EvalResult:
+    point: Dict
+    value: float
+    cost_seconds: float = 0.0
+    meta: dict = field(default_factory=dict)
+
+
+def run_objective(objective: Evaluator, point: Dict):
+    """One isolated evaluation: ``(value, seconds, meta)``.
+
+    Module-level so the process backend can pickle it.  A raising
+    objective is a failed configuration, not a pool failure.
+    """
+    t0 = time.time()
+    try:
+        value, meta = objective(point)
+        value = float(value)
+        meta = dict(meta)
+    except Exception as e:
+        value, meta = -math.inf, {"error": repr(e)}
+    return value, time.time() - t0, meta
+
+
+class MemoCache:
+    """Shared memo of completed evaluations, keyed by ``space.key(point)``."""
+
+    def __init__(self, backing=None, lock=None):
+        self._d = {} if backing is None else backing
+        self._lock = lock if lock is not None else threading.Lock()
+
+    @classmethod
+    def process_safe(cls) -> "MemoCache":
+        import multiprocessing
+
+        manager = multiprocessing.Manager()
+        return cls(backing=manager.dict(), lock=manager.Lock())
+
+    def get(self, key) -> Optional[EvalResult]:
+        with self._lock:
+            return self._d.get(key)
+
+    def put(self, key, result: EvalResult) -> None:
+        with self._lock:
+            self._d[key] = result
+
+    def __len__(self) -> int:
+        return len(self._d)
+
+
+class EvaluationExecutor:
+    def __init__(
+        self,
+        objective,
+        space: SearchSpace,
+        *,
+        parallelism: int = 1,
+        backend: Optional[str] = None,
+        timeout: Optional[float] = None,
+        cache: Optional[MemoCache] = None,
+    ):
+        self.objective = as_evaluator(objective)
+        self.space = space
+        self.parallelism = max(1, int(parallelism))
+        # a timeout needs a pool to enforce it mid-run: the serial backend
+        # can only flag an overrun after the objective returns
+        if backend is None:
+            backend = ("serial" if self.parallelism == 1 and timeout is None
+                       else "thread")
+        self.backend = backend
+        if self.backend not in BACKENDS:
+            raise ValueError(
+                f"unknown executor backend {self.backend!r}; one of {BACKENDS}")
+        self.timeout = timeout
+        if cache is not None:
+            self.cache = cache
+        elif self.backend == "process":
+            self.cache = MemoCache.process_safe()
+        else:
+            self.cache = MemoCache()
+        self._pool = None
+
+    def _get_pool(self):
+        if self._pool is None:
+            if self.backend == "thread":
+                self._pool = ThreadPoolExecutor(max_workers=self.parallelism)
+            elif self.backend == "process":
+                self._pool = ProcessPoolExecutor(max_workers=self.parallelism)
+        return self._pool
+
+    # -- evaluation ----------------------------------------------------------
+    def evaluate(self, points: List[Dict]) -> List[EvalResult]:
+        """Evaluate a batch; results in submission order."""
+        results: List[Optional[EvalResult]] = [None] * len(points)
+        todo: List[int] = []  # indices that miss the memo cache
+        first_at: Dict = {}  # key -> index of first in-batch occurrence
+        for i, p in enumerate(points):
+            key = self.space.key(p)
+            hit = self.cache.get(key)
+            if hit is not None:
+                results[i] = EvalResult(dict(p), hit.value, 0.0,
+                                        dict(hit.meta, memoized=True))
+            elif key in first_at:
+                pass  # in-batch duplicate: aliased after the batch runs
+            else:
+                first_at[key] = i
+                todo.append(i)
+
+        if todo:
+            if self.backend == "serial":
+                for i in todo:
+                    results[i] = self._run_one(points[i])
+            else:
+                pool = self._get_pool()
+                futures = [(i, pool.submit(run_objective, self.objective,
+                                           points[i]))
+                           for i in todo]
+                for i, fut in futures:
+                    try:
+                        value, secs, meta = fut.result(timeout=self.timeout)
+                    except FutureTimeoutError:
+                        if fut.cancel():
+                            # never started (pool starved by earlier slow
+                            # evals): this point was not measured at all, so
+                            # give it its run inline rather than recording a
+                            # bogus failure
+                            results[i] = self._run_one(points[i])
+                            continue
+                        # genuinely running too long: abandon the stuck
+                        # worker (it is not joined); the pool survives
+                        value, secs, meta = (-math.inf, float(self.timeout),
+                                             {"timeout": True})
+                    results[i] = EvalResult(dict(points[i]), value, secs, meta)
+            for i in todo:
+                self.cache.put(self.space.key(points[i]), results[i])
+
+        for i, p in enumerate(points):  # resolve in-batch duplicates
+            if results[i] is None:
+                src = results[first_at[self.space.key(p)]]
+                results[i] = EvalResult(dict(p), src.value, 0.0,
+                                        dict(src.meta, memoized=True))
+        return results
+
+    def _run_one(self, point: Dict) -> EvalResult:
+        value, secs, meta = run_objective(self.objective, point)
+        if self.timeout is not None and secs > self.timeout:
+            value, meta = -math.inf, dict(meta, timeout=True)
+        return EvalResult(dict(point), value, secs, meta)
+
+    # -- lifecycle -----------------------------------------------------------
+    def close(self) -> None:
+        if self._pool is not None:
+            self._pool.shutdown(wait=False, cancel_futures=True)
+            self._pool = None
+
+    def __enter__(self) -> "EvaluationExecutor":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

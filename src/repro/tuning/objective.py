@@ -1,0 +1,53 @@
+"""Explicit objective protocol for the tuning stack.
+
+An *evaluator* maps a point (dict of backend-parameter values) to
+``(value, meta)`` — always a 2-tuple, declared by the class attribute
+``returns_meta = True``.  Plain value-returning callables (the common
+case in tests and synthetic benchmarks) are adapted with
+``FunctionEvaluator``; nothing downstream sniffs the return type with
+``isinstance(value, tuple)`` any more.
+
+This module is dependency-light on purpose: the executor and the core
+tuner import it without pulling in jax.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Tuple
+
+
+class Evaluator:
+    """Base class for objectives that return ``(value, meta)``.
+
+    ``value`` is the throughput-like objective (higher is better;
+    ``-inf`` marks a failed configuration) and ``meta`` is a
+    JSON-serializable dict recorded alongside the evaluation.
+    """
+
+    returns_meta = True
+
+    def __call__(self, point: Dict) -> Tuple[float, dict]:
+        raise NotImplementedError
+
+
+class FunctionEvaluator(Evaluator):
+    """Adapt a plain scalar-returning callable to the (value, meta) protocol."""
+
+    def __init__(self, fn: Callable[[Dict], float]):
+        self.fn = fn
+
+    def __call__(self, point: Dict) -> Tuple[float, dict]:
+        value = self.fn(point)
+        if isinstance(value, tuple):
+            raise TypeError(
+                "plain objective callables must return a scalar; to attach "
+                "metadata, subclass repro.tuning.objective.Evaluator (or set "
+                "returns_meta = True) and return (value, meta) explicitly"
+            )
+        return float(value), {}
+
+
+def as_evaluator(objective) -> Evaluator:
+    """Normalize any objective to the explicit (value, meta) protocol."""
+    if getattr(objective, "returns_meta", False):
+        return objective
+    return FunctionEvaluator(objective)

@@ -13,6 +13,8 @@ from repro.models.params import split_params
 from repro.optim.optimizer import OptimizerConfig, adamw_init
 from repro.train.train_step import make_train_step
 
+pytestmark = pytest.mark.slow  # per-arch forward/train-step compiles are minutes of XLA work
+
 ARCHS = list_archs()
 
 

@@ -56,7 +56,10 @@ def test_gp_uncertainty_grows_away_from_data():
     assert far > near
 
 
-@pytest.mark.parametrize("algo", ["bo", "ga", "nms", "random"])
+@pytest.mark.parametrize("algo", [
+    pytest.param("bo", marks=pytest.mark.slow),  # 50 GP refits on a 263k grid
+    "ga", "nms", "random",
+])
 def test_engine_improves_over_budget(algo):
     h = run(algo, seed=1)
     curve = h.best_curve()
@@ -64,12 +67,14 @@ def test_engine_improves_over_budget(algo):
     assert len(h) == 50
 
 
+@pytest.mark.slow
 def test_bo_beats_random_on_average():
     bo = np.mean([run("bo", seed=s).best().value for s in range(3)])
     rnd = np.mean([run("random", seed=s).best().value for s in range(3)])
     assert bo >= rnd - 1.0
 
 
+@pytest.mark.slow
 def test_bo_explores_full_ranges():
     """Paper Table 2: BO samples ~100% of every parameter's range."""
     h = run("bo", seed=0)
@@ -84,7 +89,8 @@ def test_engines_dedup_evaluations():
     assert len(set(keys)) >= int(0.9 * len(keys))
 
 
-def test_tuner_handles_failing_objective():
+@pytest.mark.slow  # 30 BO iterations; the fast failure-isolation coverage
+def test_tuner_handles_failing_objective():  # lives in test_executor.py
     calls = {"n": 0}
 
     def flaky(p):

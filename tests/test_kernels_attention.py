@@ -6,6 +6,8 @@ import pytest
 
 from repro.kernels import ops, ref
 
+pytestmark = pytest.mark.slow  # Pallas kernel sweeps
+
 TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
 
 

@@ -5,6 +5,8 @@ import pytest
 
 from repro.kernels import ops, ref
 
+pytestmark = pytest.mark.slow  # Pallas kernel sweeps
+
 
 def _mk(rng, *shape, dtype=jnp.float32):
     return jnp.asarray(rng.standard_normal(shape), dtype)

@@ -14,6 +14,8 @@ import pytest
 from repro.core import SearchSpace, Tuner, TunerConfig
 from benchmarks.workloads import MEASURED_WORKLOADS, surrogate_objective
 
+pytestmark = pytest.mark.slow  # full 50-iteration tuning runs per engine/workload
+
 ALGOS = ("bo", "ga", "nms")
 
 

@@ -1,4 +1,5 @@
 """Serving path: generate() coherence and KV-cache reuse."""
+import pytest
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -7,6 +8,8 @@ from repro.configs import get_config
 from repro.models import CPU_TEST, build_model
 from repro.models.params import split_params
 from repro.serve.serve_step import generate, make_decode_step, make_prefill_step
+
+pytestmark = pytest.mark.slow  # real generate/decode loops
 
 
 def test_generate_matches_teacher_forcing():

@@ -1,32 +1,30 @@
-"""Hypothesis property tests for the search space + history invariants."""
+"""Property tests for the search space + history invariants.
+
+Two layers exercise the same invariants:
+
+* a seeded pure-pytest fallback that always runs (randomized spaces from
+  ``numpy.random``), so the properties are covered even where
+  ``hypothesis`` is not installed;
+* the original hypothesis suite, kept under ``HAVE_HYPOTHESIS`` so it
+  adds shrinking/edge-case power whenever the dependency is available.
+"""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
 
 from repro.core import CatDim, History, IntDim, SearchSpace
 
-
-def space_strategy():
-    int_dim = st.builds(
-        lambda name, lo, span, step: IntDim(name, lo, lo + span * step, step),
-        st.just(""), st.integers(0, 10), st.integers(1, 12), st.integers(1, 10),
-    )
-    cat_dim = st.builds(
-        lambda name, n: CatDim(name, tuple(f"c{i}" for i in range(n))),
-        st.just(""), st.integers(2, 6),
-    )
-    def _name(dims):
-        return SearchSpace([
-            (IntDim(f"d{i}", d.lo, d.hi, d.step) if isinstance(d, IntDim)
-             else CatDim(f"d{i}", d.choices))
-            for i, d in enumerate(dims)
-        ])
-    return st.lists(st.one_of(int_dim, cat_dim), min_size=1, max_size=5).map(_name)
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
 
 
-@given(space=space_strategy(), seed=st.integers(0, 2**32 - 1))
-@settings(max_examples=60, deadline=None)
-def test_encode_decode_roundtrip(space, seed):
-    rng = np.random.default_rng(seed)
+# ---------------------------------------------------------------------------
+# shared invariant checks
+# ---------------------------------------------------------------------------
+
+def check_roundtrip(space, rng):
     for p in space.sample(rng, 5):
         assert space.validate(p)
         u = space.encode(p)
@@ -34,32 +32,22 @@ def test_encode_decode_roundtrip(space, seed):
         assert space.decode(u) == p  # grid points roundtrip exactly
 
 
-@given(space=space_strategy(), data=st.data())
-@settings(max_examples=60, deadline=None)
-def test_decode_always_valid(space, data):
-    u = np.array([data.draw(st.floats(-0.5, 1.5)) for _ in range(space.n_dims)])
-    p = space.decode(u)
-    assert space.validate(p)
+def check_decode_always_valid(space, rng):
+    u = rng.uniform(-0.5, 1.5, size=space.n_dims)
+    assert space.validate(space.decode(u))
 
 
-@given(space=space_strategy(), seed=st.integers(0, 2**32 - 1))
-@settings(max_examples=40, deadline=None)
-def test_perturb_stays_on_grid(space, seed):
-    rng = np.random.default_rng(seed)
+def check_perturb_stays_on_grid(space, rng):
     p = space.sample(rng, 1)[0]
     for _ in range(10):
         p = space.perturb(rng, p)
         assert space.validate(p)
 
 
-@given(space=space_strategy(), seed=st.integers(0, 2**32 - 1),
-       n=st.integers(1, 30))
-@settings(max_examples=40, deadline=None)
-def test_history_invariants(space, seed, n):
-    rng = np.random.default_rng(seed)
+def check_history_invariants(space, rng, n):
     h = History(space)
     best = -np.inf
-    for i, p in enumerate(space.sample(rng, n)):
+    for p in space.sample(rng, n):
         v = float(rng.standard_normal())
         h.add(p, v)
         best = max(best, v)
@@ -73,21 +61,127 @@ def test_history_invariants(space, seed, n):
         assert -1e-9 <= frac <= 1 + 1e-9
 
 
-@given(space=space_strategy(), seed=st.integers(0, 2**32 - 1))
-@settings(max_examples=20, deadline=None)
-def test_history_json_roundtrip(tmp_path_factory, space, seed):
-    rng = np.random.default_rng(seed)
+def check_history_json_roundtrip(space, rng, tmp_path):
     h = History(space)
     for p in space.sample(rng, 7):
         h.add(p, float(rng.standard_normal()))
-    path = tmp_path_factory.mktemp("hist") / "h.json"
+    path = tmp_path / "h.json"
     h.save(path)
     h2 = History.load(path, space)
     assert h2.points() == h.points()
     assert np.allclose(h2.values(), h.values())
 
 
+# ---------------------------------------------------------------------------
+# seeded pure-pytest fallback (always runs)
+# ---------------------------------------------------------------------------
+
+def random_space(rng) -> SearchSpace:
+    dims = []
+    for i in range(int(rng.integers(1, 6))):
+        if rng.random() < 0.5:
+            lo = int(rng.integers(0, 11))
+            span = int(rng.integers(1, 13))
+            step = int(rng.integers(1, 11))
+            dims.append(IntDim(f"d{i}", lo, lo + span * step, step))
+        else:
+            dims.append(CatDim(f"d{i}",
+                               tuple(f"c{j}" for j in range(rng.integers(2, 7)))))
+    return SearchSpace(dims)
+
+
+@pytest.mark.parametrize("seed", range(20))
+def test_space_invariants_seeded(seed, tmp_path):
+    rng = np.random.default_rng(seed)
+    for _ in range(3):
+        space = random_space(rng)
+        check_roundtrip(space, rng)
+        check_decode_always_valid(space, rng)
+        check_perturb_stays_on_grid(space, rng)
+        check_history_invariants(space, rng, int(rng.integers(1, 31)))
+    check_history_json_roundtrip(random_space(rng), rng, tmp_path)
+
+
 def test_lhs_covers_strata():
     space = SearchSpace([IntDim("a", 0, 9, 1)])
     pts = space.sample_lhs(np.random.default_rng(0), 10)
     assert len({p["a"] for p in pts}) >= 8  # near-perfect stratification
+
+
+def test_inflight_bookkeeping():
+    space = SearchSpace([IntDim("a", 0, 9, 1)])
+    h = History(space)
+    p, q = {"a": 1}, {"a": 2}
+    h.mark_inflight([p, q])
+    assert h.pending(p) and h.pending(q) and h.n_pending() == 2
+    assert not h.seen(p)  # in flight is not evaluated
+    h.add(p, 1.0)  # completing an evaluation clears its in-flight mark
+    assert h.seen(p) and not h.pending(p) and h.n_pending() == 1
+    h.clear_inflight([q])
+    assert h.n_pending() == 0
+
+
+def test_save_excludes_inflight(tmp_path):
+    """A checkpoint written mid-batch only holds completed evaluations."""
+    space = SearchSpace([IntDim("a", 0, 9, 1)])
+    h = History(space)
+    h.add({"a": 0}, 1.0)
+    h.mark_inflight([{"a": 5}])
+    path = tmp_path / "h.json"
+    h.save(path)
+    h2 = History.load(path, space)
+    assert h2.points() == [{"a": 0}]
+    assert h2.n_pending() == 0
+
+
+# ---------------------------------------------------------------------------
+# hypothesis layer (optional dependency)
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+
+    def space_strategy():
+        int_dim = st.builds(
+            lambda name, lo, span, step: IntDim(name, lo, lo + span * step, step),
+            st.just(""), st.integers(0, 10), st.integers(1, 12), st.integers(1, 10),
+        )
+        cat_dim = st.builds(
+            lambda name, n: CatDim(name, tuple(f"c{i}" for i in range(n))),
+            st.just(""), st.integers(2, 6),
+        )
+        def _name(dims):
+            return SearchSpace([
+                (IntDim(f"d{i}", d.lo, d.hi, d.step) if isinstance(d, IntDim)
+                 else CatDim(f"d{i}", d.choices))
+                for i, d in enumerate(dims)
+            ])
+        return st.lists(st.one_of(int_dim, cat_dim),
+                        min_size=1, max_size=5).map(_name)
+
+    @given(space=space_strategy(), seed=st.integers(0, 2**32 - 1))
+    @settings(max_examples=60, deadline=None)
+    def test_encode_decode_roundtrip(space, seed):
+        check_roundtrip(space, np.random.default_rng(seed))
+
+    @given(space=space_strategy(), seed=st.integers(0, 2**32 - 1))
+    @settings(max_examples=60, deadline=None)
+    def test_decode_always_valid(space, seed):
+        check_decode_always_valid(space, np.random.default_rng(seed))
+
+    @given(space=space_strategy(), seed=st.integers(0, 2**32 - 1))
+    @settings(max_examples=40, deadline=None)
+    def test_perturb_stays_on_grid(space, seed):
+        check_perturb_stays_on_grid(space, np.random.default_rng(seed))
+
+    @given(space=space_strategy(), seed=st.integers(0, 2**32 - 1),
+           n=st.integers(1, 30))
+    @settings(max_examples=40, deadline=None)
+    def test_history_invariants(space, seed, n):
+        check_history_invariants(space, np.random.default_rng(seed), n)
+
+    @given(space=space_strategy(), seed=st.integers(0, 2**32 - 1))
+    @settings(max_examples=20, deadline=None)
+    def test_history_json_roundtrip(tmp_path_factory, space, seed):
+        check_history_json_roundtrip(
+            space, np.random.default_rng(seed),
+            tmp_path_factory.mktemp("hist"))

@@ -22,6 +22,8 @@ from repro.runtime.fault_tolerance import (
     WorkerFailure,
 )
 
+pytestmark = pytest.mark.slow  # optimizer/pipeline integration runs
+
 
 # --- optimizer ---------------------------------------------------------------
 

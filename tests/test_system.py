@@ -1,5 +1,6 @@
 """End-to-end system behaviour: train -> checkpoint -> restore -> serve,
 through the public launchers (the full paper pipeline on one box)."""
+import pytest
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -13,6 +14,8 @@ from repro.models.runtime import Runtime
 from repro.optim.optimizer import OptimizerConfig
 from repro.serve.serve_step import generate
 from repro.train.trainer import Trainer, TrainerConfig
+
+pytestmark = pytest.mark.slow  # end-to-end train->checkpoint->serve + measured tuning
 
 
 def test_train_checkpoint_serve_roundtrip(tmp_path):

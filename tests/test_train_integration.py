@@ -1,5 +1,6 @@
 """End-to-end training: loss decreases; failure -> restore -> identical
 stream; microbatching equivalence."""
+import pytest
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -13,6 +14,8 @@ from repro.optim.optimizer import OptimizerConfig, adamw_init
 from repro.runtime.fault_tolerance import FailureInjector
 from repro.train.train_step import make_train_step
 from repro.train.trainer import Trainer, TrainerConfig
+
+pytestmark = pytest.mark.slow  # real training loops
 
 
 def test_loss_decreases_dense():
