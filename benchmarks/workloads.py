@@ -21,7 +21,7 @@ Each workload exposes
 from __future__ import annotations
 
 import math
-from typing import Callable, Dict, Tuple
+from typing import Callable, Dict
 
 import numpy as np
 
@@ -144,7 +144,6 @@ def surrogate_objective(workload: Dict) -> Callable[[Dict], float]:
 
 
 def _lm_make_step(workload: Dict):
-    import dataclasses
 
     import jax
     import jax.numpy as jnp

@@ -6,7 +6,6 @@ then prints the per-engine bests and exploration coverage (Table 2 style).
 
     PYTHONPATH=src:. python examples/quickstart.py
 """
-import numpy as np
 
 from benchmarks.workloads import MEASURED_WORKLOADS, measured_make_step
 from repro.core import SearchSpace, Tuner, TunerConfig

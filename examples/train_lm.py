@@ -8,7 +8,6 @@ default builds a ~100M-parameter qwen2-family model (slow on CPU but real:
 same code path as the production launcher).
 """
 import argparse
-import sys
 
 from repro.launch.train import main as train_main
 

@@ -4,20 +4,30 @@ mesh (each evaluation lowers + compiles the cell).
 
     PYTHONPATH=src python examples/tune_backend.py \
         [--arch qwen3-moe-30b-a3b] [--shape train_4k] [--budget 12] \
-        [--parallelism 4] [--wall-clock 600]
+        [--parallelism 4] [--wall-clock 600] [--loop async|batch] \
+        [--memo-cache artifacts/memo_cache.json]
 
-How it runs (batched ask/tell):
+How it runs (completion-driven ask/tell):
 
-* the engine is **asked** for ``--parallelism`` candidate points per
-  round (``engine.ask(n, history)``), the parallel executor compiles
-  them concurrently (XLA releases the GIL, so the thread pool overlaps
-  the ~30-90 s compiles), and the results are **told** back
-  (``engine.tell(points, values)``);
+* the tuner keeps ``--parallelism`` executor workers full: the engine is
+  **asked** for a candidate the moment a worker frees up, and each
+  result is **told** back the moment its measurement completes — in
+  completion order, so one slow compile never stalls the other workers
+  at a batch barrier (``--loop batch`` restores the legacy barrier loop
+  for comparison);
 * a crashed or OOM configuration scores ``-inf`` without killing the
-  worker pool, and ``--wall-clock`` lets you budget by seconds instead
-  of iteration count — with a small budget of real compiles, wall-clock
-  budgeting is usually what you want;
-* ``--parallelism 1`` (default) is the paper-faithful sequential loop.
+  worker pool, and ``--wall-clock`` budgets by seconds instead of
+  iteration count — the deadline also bounds *in-flight* compiles:
+  whatever is unfinished when it passes is abandoned unrecorded (a
+  wall-clock budget selects a pool backend even at ``--parallelism 1``,
+  since only a pool can abandon a running compile);
+* every measurement is persisted twice over: the roofline compile cache
+  (``--cache``, keyed by backend config) and the tuner's own
+  ``--memo-cache`` (keyed by search-space point).  Both are atomic,
+  file-locked JSON stores, so re-running this script re-evaluates
+  nothing and concurrent runs merge rather than clobber;
+* ``--parallelism 1`` (default) is the paper-faithful sequential loop,
+  bit-for-bit identical to the pre-batching harness.
 
 `python -m repro.launch.tune` is the full 50-iteration driver used for
 EXPERIMENTS.md §Perf; it exposes the same knobs plus --eval-timeout and
@@ -35,13 +45,22 @@ def main():
     ap.add_argument("--budget", type=int, default=12)
     ap.add_argument("--algo", default="bo")
     ap.add_argument("--parallelism", type=int, default=1)
-    ap.add_argument("--wall-clock", type=float, default=None)
+    ap.add_argument("--wall-clock", type=float, default=None,
+                    help="seconds budget; bounds in-flight compiles too")
+    ap.add_argument("--loop", default="async", choices=["async", "batch"],
+                    help="completion-driven scheduler (default) vs legacy "
+                         "per-batch barrier")
+    ap.add_argument("--memo-cache", default="artifacts/memo_cache.json",
+                    help="disk-backed memo of evaluated points; a second "
+                         "run of the same job re-evaluates nothing")
     args = ap.parse_args()
     argv = [
         "--arch", args.arch, "--shape", args.shape, "--algo", args.algo,
         "--budget", str(args.budget),
         "--parallelism", str(args.parallelism),
+        "--loop", args.loop,
         "--cache", "artifacts/tune_cache.json",
+        "--memo-cache", args.memo_cache,
     ]
     if args.wall_clock is not None:
         argv += ["--wall-clock", str(args.wall_clock)]

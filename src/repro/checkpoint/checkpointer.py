@@ -20,7 +20,6 @@ import hashlib
 import json
 import pathlib
 import shutil
-import threading
 import time
 from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Any, Dict, List, Optional

@@ -2,12 +2,15 @@
 parameters for training/inference throughput — BO (GP + SMSego), GA, and
 Nelder-Mead simplex behind a common engine interface (paper Fig. 4).
 
-Engines speak the batched ask/tell contract (``engine.ask(n, history)``
--> deduplicated candidate batch; ``engine.tell(points, values)`` feeds
-results back) and the :class:`Tuner` drives them through a parallel
-evaluation executor (``repro.tuning.executor``) under an iteration
-budget, a wall-clock budget, or both.  ``parallelism=1`` reproduces the
-paper's sequential one-point-per-iteration harness bit-for-bit."""
+Engines speak the ask/tell contract (``engine.ask(n, history)`` ->
+deduplicated candidate batch; ``engine.tell(points, values, costs)``
+feeds results back, incrementally and in completion order) and the
+:class:`Tuner` drives them through a completion-driven scheduler over
+the parallel evaluation executor (``repro.tuning.executor``) under an
+iteration budget, a wall-clock budget, or both — with an optional
+disk-backed memo cache so repeated runs re-evaluate nothing.
+``parallelism=1`` reproduces the paper's sequential
+one-point-per-iteration harness bit-for-bit."""
 from repro.core.bayesopt import BayesOpt
 from repro.core.engine import Engine
 from repro.core.exhaustive import Exhaustive

@@ -17,6 +17,14 @@ plus local perturbations of the incumbent (exploitation neighborhood).
 by acquisition value (deduplicated, unseen), so a parallel executor can
 measure a whole acquisition batch per GP fit; ``ask(1, ...)`` selects
 exactly the argmax the single-point path always did.
+
+Under the completion-driven tuner loop, each completed measurement is
+told back immediately and the freed worker's replacement point comes
+from a *fresh* ``ask`` — i.e. the candidate set and surrogate refresh in
+completion order, so every suggestion conditions on all measurements
+finished so far (in-flight points are excluded via ``history.pending``).
+Measured ``cost_seconds`` accumulate on the engine
+(``mean_cost_seconds``) as the hook for cost-aware acquisition.
 """
 from __future__ import annotations
 

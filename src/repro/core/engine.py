@@ -11,11 +11,18 @@ Engines expose two methods:
   (``history.seen``) and points currently in flight
   (``history.pending``), so a parallel executor can measure the whole
   batch concurrently without wasted repeats.
-* ``tell(points, values)`` — report measured objective values back, in
-  the same order the points were proposed.  The default implementation
-  forwards each pair to ``observe`` (the single-point state update),
-  which is what most engines need; engines with speculative batches
-  (Nelder-Mead) override it.
+* ``tell(points, values, costs=None)`` — report measured objective
+  values back.  Under the completion-driven tuner loop, ``tell`` arrives
+  *incrementally and in completion order*: typically one result at a
+  time, the moment its measurement finishes, which may not be the order
+  the points were asked.  Engines must therefore tolerate partial and
+  reordered feedback; the default implementation forwards each pair to
+  ``observe`` (the single-point state update), which is order-free and
+  what most engines need, while engines with speculative batches
+  (Nelder-Mead) buffer results and reconcile them against their state
+  machine.  ``costs`` carries the measured ``cost_seconds`` of each
+  evaluation so engines can become wall-clock-aware (the base class
+  accumulates them; see ``mean_cost_seconds``).
 
 ``ask(1, ...)`` is guaranteed to consume the engine RNG exactly like the
 historical single-point ``suggest`` did, so a sequential driver
@@ -39,16 +46,32 @@ class Engine:
     def __init__(self, space: SearchSpace, seed: int = 0):
         self.space = space
         self.rng = np.random.default_rng(seed)
+        self._cost_log: List[float] = []  # measured seconds per told result
 
     # -- batched contract -----------------------------------------------------
     def ask(self, n: int, history: History) -> List[Dict]:
         """Propose up to ``n`` deduplicated candidate points."""
         raise NotImplementedError
 
-    def tell(self, points: Sequence[Dict], values: Sequence[float]) -> None:
-        """Report objective values for a previously asked batch (in order)."""
+    def tell(self, points: Sequence[Dict], values: Sequence[float],
+             costs: Optional[Sequence[float]] = None) -> None:
+        """Report objective values for previously asked points.
+
+        May be called once per completed evaluation (completion order)
+        or once per batch; both must leave the engine in the same state.
+        """
+        self._record_costs(costs, len(points))
         for p, v in zip(points, values):
             self.observe(p, v)
+
+    def _record_costs(self, costs: Optional[Sequence[float]], n: int) -> None:
+        self._cost_log.extend([0.0] * n if costs is None else costs)
+
+    @property
+    def mean_cost_seconds(self) -> float:
+        """Mean measured evaluation cost — the wall-clock-awareness hook."""
+        paid = [c for c in self._cost_log if c > 0]
+        return sum(paid) / len(paid) if paid else 0.0
 
     # -- single-point compatibility shims ------------------------------------
     def suggest(self, history: History) -> Dict:

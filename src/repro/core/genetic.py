@@ -9,6 +9,14 @@ purely random values with small probability).
 ``ask(n, ...)`` emits a *generation*: n distinct children bred from the
 current two fittest parents, which is the natural unit of parallel
 measurement for a GA.
+
+Under the completion-driven tuner loop the GA becomes *steady-state*:
+results are told (and land in the shared history) one at a time in
+completion order, and each replacement child is bred from the two
+fittest individuals *at that moment* — there is no generation barrier,
+so a strong early-finishing individual starts parenting immediately.
+The engine itself stays stateless between calls: parent selection reads
+the history, which is exactly what makes out-of-order insertion safe.
 """
 from __future__ import annotations
 
@@ -46,11 +54,13 @@ class GeneticAlgorithm(Engine):
         if len(order) < 2:
             return None
         if self.tournament:
-            pick = lambda: max(
-                self.rng.choice(order, size=min(self.tournament, len(order)),
-                                replace=False),
-                key=lambda e: e.value,
-            )
+            def pick():
+                return max(
+                    self.rng.choice(order,
+                                    size=min(self.tournament, len(order)),
+                                    replace=False),
+                    key=lambda e: e.value,
+                )
             return pick().point, pick().point
         return order[0].point, order[1].point
 

@@ -4,18 +4,23 @@ The history is the single source of truth shared by every algorithm
 engine (paper Fig. 4: common data-acquisition module).  It also implements
 the paper's Table-2 analysis: per-parameter sampled-range coverage.
 
-Batched evaluation support: ``mark_inflight``/``clear_inflight`` track
-points handed to the parallel executor but not yet measured, so engines
-never re-propose them (``pending``) and a checkpoint written mid-batch
-(``save`` persists completed evaluations only) stays consistent —
-resuming simply re-evaluates whatever was still in flight.
+Asynchronous evaluation support: ``mark_inflight``/``clear_inflight``
+track points handed to the parallel executor but not yet measured, so
+engines never re-propose them (``pending``).  Under the
+completion-driven tuner loop, completions arrive out of submission
+order: ``add`` appends each result the moment it lands (evaluation
+``index`` is completion order, not ask order) and atomically drops the
+point's in-flight mark, so the pending set and the completed set stay
+disjoint at every instant.  A checkpoint written mid-stream (``save``
+persists completed evaluations only) is therefore always consistent —
+resuming re-evaluates whatever was still in flight, and stale in-flight
+marks never leak into a checkpoint.
 """
 from __future__ import annotations
 
 import json
 import math
 import pathlib
-import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 

@@ -11,10 +11,17 @@ paper's Table 2 measures.
 Batching: NMS is inherently sequential, so ``ask(n>1, ...)`` pads the
 primary probe with *speculative* candidates — the expansion and both
 contraction probes that would follow a reflection, or the whole
-precomputed shrink queue.  ``tell`` replays results through the state
-machine in order, consuming any speculatively measured probe the
-transition actually lands on; unconsumed extras are simply left in the
-history (and are free on re-ask via the tuner's memoization).
+precomputed shrink queue.
+
+Completion-order reconciliation: under the completion-driven tuner loop,
+``tell`` arrives one result at a time in *completion* order, so a
+speculative probe can land before the primary it was speculating past.
+``tell`` therefore stashes every reported result in a buffer and drains
+the buffer through the state machine for as long as the value the
+machine expects next is available.  A probe that completes late (or was
+never needed) simply stays buffered and is consumed the moment the
+machine reaches it — or never, which is free, since the tuner's history
+memoizes it anyway.
 """
 from __future__ import annotations
 
@@ -48,6 +55,7 @@ class NelderMead(Engine):
         self._fr: Optional[float] = None
         self._xprobe: Optional[np.ndarray] = None
         self._shrink_queue: List[np.ndarray] = []
+        self._told: Dict[Tuple, Tuple[Dict, float]] = {}  # completion buffer
 
     # -- state machine --------------------------------------------------------
     def _order(self):
@@ -102,16 +110,20 @@ class NelderMead(Engine):
                 spec(x)
         return batch[:n]
 
-    def tell(self, points: Sequence[Dict], values: Sequence[float]) -> None:
-        avail = {}
+    def tell(self, points: Sequence[Dict], values: Sequence[float],
+             costs=None) -> None:
+        self._record_costs(costs, len(points))
         for p, v in zip(points, values):
-            avail.setdefault(self.space.key(p), (p, v))
-        while avail:
+            self._told.setdefault(self.space.key(p), (p, v))
+        # drain: consume buffered results for as long as the state machine's
+        # next expected point has already been measured (handles primaries
+        # and speculative probes completing in any order)
+        while True:
             exp = self._primary()
             k = self.space.key(exp)
-            if k not in avail:
-                break  # speculation missed; leftovers stay memoized in history
-            p, v = avail.pop(k)
+            if k not in self._told:
+                break  # next expected value still in flight / never asked
+            p, v = self._told.pop(k)
             self.observe(p, v)
 
     def observe(self, point: Dict, value: float) -> None:

@@ -1,19 +1,44 @@
-"""Tuner orchestrator (paper Fig. 4), batched ask/tell edition.
+"""Tuner orchestrator (paper Fig. 4), completion-driven edition.
 
 Algorithm-selection switch + iteration budget (paper: 50) **or**
-wall-clock budget + memoized objective + checkpoint/resume.  Each round
-the engine is *asked* for a batch of candidate points, the batch is
-measured by the parallel :class:`EvaluationExecutor`, and the results
-are *told* back — so the measurement side saturates ``parallelism``
-workers while the engine thinks once per batch.
+wall-clock budget + memoized objective + checkpoint/resume.
 
-``parallelism=1`` (the default) uses the serial executor with batch size
-1 and reproduces the historical one-point-per-iteration loop bit-for-bit
-for the same seed.  Objectives follow the explicit evaluator protocol
-(``(value, meta)``; see ``repro.tuning.objective``); plain scalar
-callables are adapted automatically.  Failures (OOM, compile error,
-timeout) surface as ``-inf`` and are recorded, mirroring how a real
-measurement harness handles a crashed configuration.
+The default loop (``loop="async"``) is a completion-driven scheduler:
+the engine is asked for enough candidates to fill every free worker, the
+:class:`EvaluationExecutor` measures them concurrently, and the moment
+*any* evaluation completes its result is ``tell``-ed back and a single
+replacement point is asked — so engines see results in completion order
+(BO refreshes its candidate set per completion, the GA inserts
+steady-state, Nelder-Mead reconciles speculative probes that finish
+late) and no worker ever idles at a batch barrier behind one slow
+configuration.  ``loop="batch"`` keeps the legacy per-batch barrier for
+comparison (see ``benchmarks/perf_iterations.py --async-loop``).
+
+``parallelism=1`` (the default) uses the serial executor and both loops
+degenerate to the historical one-point-per-iteration sequence, which
+reproduces the seed trace bit-for-bit for the same seed (pinned by
+``tests/golden/ask_tell_traces.json``).
+
+The wall-clock budget bounds *in-flight* work, not just the gaps between
+completions: the deadline is threaded into the executor's wait machinery
+(the same plumbing that enforces per-evaluation timeouts), and work
+still unfinished when it passes is **abandoned** — nothing recorded,
+nothing cached, the run stops on time.  When a wall-clock budget is
+configured, ``parallelism=1`` automatically uses a 1-worker thread pool
+instead of the serial backend, since only a pool can abandon a running
+evaluation; an explicitly forced ``executor_backend="serial"`` can still
+only stop *between* evaluations, never mid-measurement.
+
+``memo_cache_path`` backs the executor's memo cache with an on-disk JSON
+store (atomic writes + cross-process file locking), so a re-run or a
+resumed run of the same tuning job re-evaluates nothing and multiple
+hosts sharing a filesystem reuse each other's measurements.
+
+Objectives follow the explicit evaluator protocol (``(value, meta)``;
+see ``repro.tuning.objective``); plain scalar callables are adapted
+automatically.  Failures (OOM, compile error, timeout) surface as
+``-inf`` and are recorded, mirroring how a real measurement harness
+handles a crashed configuration.
 """
 from __future__ import annotations
 
@@ -31,7 +56,7 @@ from repro.core.history import History
 from repro.core.neldermead import NelderMead
 from repro.core.random_search import RandomSearch
 from repro.core.space import SearchSpace
-from repro.tuning.executor import EvalResult, EvaluationExecutor
+from repro.tuning.executor import EvalResult, EvaluationExecutor, PendingEval
 from repro.tuning.objective import as_evaluator
 
 ENGINES = {
@@ -42,6 +67,8 @@ ENGINES = {
     "exhaustive": Exhaustive,
 }
 
+LOOPS = ("async", "batch")
+
 
 @dataclass
 class TunerConfig:
@@ -51,12 +78,15 @@ class TunerConfig:
     checkpoint_path: Optional[str] = None
     engine_kwargs: dict = field(default_factory=dict)
     verbose: bool = True
-    # -- batched evaluation --------------------------------------------------
+    # -- parallel evaluation -------------------------------------------------
     parallelism: int = 1  # worker-pool width; 1 == historical sequential loop
-    batch_size: Optional[int] = None  # points per ask; default: parallelism
+    batch_size: Optional[int] = None  # batch loop: points per ask
     executor_backend: Optional[str] = None  # serial|thread|process (auto)
     eval_timeout: Optional[float] = None  # seconds per evaluation; -inf past it
-    wall_clock_budget: Optional[float] = None  # seconds; stops between batches
+    wall_clock_budget: Optional[float] = None  # secs; unfinished work is
+    # abandoned at the deadline (forces a pool backend unless overridden)
+    loop: str = "async"  # async (completion-driven) | batch (legacy barrier)
+    memo_cache_path: Optional[str] = None  # disk-backed cross-run memo cache
 
 
 class Tuner:
@@ -73,14 +103,22 @@ class Tuner:
             raise ValueError(
                 f"unknown algorithm {config.algorithm!r}; one of {sorted(ENGINES)}"
             )
+        if config.loop not in LOOPS:
+            raise ValueError(f"unknown loop {config.loop!r}; one of {LOOPS}")
         self.engine: Engine = ENGINES[config.algorithm](
             space, seed=config.seed, **config.engine_kwargs
         )
+        backend = config.executor_backend
+        if backend is None and config.wall_clock_budget is not None:
+            # the serial backend cannot abandon a running evaluation, so a
+            # wall-clock budget needs a pool even at parallelism=1
+            backend = "thread"
         self.executor = EvaluationExecutor(
             self.objective, space,
             parallelism=config.parallelism,
-            backend=config.executor_backend,
+            backend=backend,
             timeout=config.eval_timeout,
+            cache_path=config.memo_cache_path,
         )
         self.history = History(space)
         if config.checkpoint_path and pathlib.Path(config.checkpoint_path).exists():
@@ -89,25 +127,111 @@ class Tuner:
     def _resume(self, path: str) -> None:
         """Fault tolerance: reload history + replay it into the engine.
 
-        A checkpoint only ever contains completed evaluations (in-flight
-        points are excluded from ``History.save``), so resuming mid-batch
-        simply re-evaluates whatever had not finished.
+        A checkpoint only ever contains completed evaluations (points
+        still in flight when the run died are excluded from
+        ``History.save``), so resuming mid-stream simply re-evaluates
+        whatever had not finished — or pulls it straight from the
+        disk-backed memo cache if it completed after the checkpoint.
 
         Replay goes through ``tell`` (one call with the whole trace), not
         raw per-point ``observe``: engines with speculative batches
-        (Nelder-Mead) consume only the points their state machine actually
-        asked for, in order — feeding unconsumed speculative probes into
-        ``observe`` would corrupt the state machine.
+        (Nelder-Mead) buffer the results and consume only the points
+        their state machine actually reaches, in order — feeding
+        unconsumed speculative probes into ``observe`` would corrupt the
+        state machine.
         """
         loaded = History.load(path, self.space)
         for ev in loaded.evals:
             self.history.add(ev.point, ev.value, ev.cost_seconds, ev.meta)
         self.engine.tell([ev.point for ev in loaded.evals],
-                         [ev.value for ev in loaded.evals])
+                         [ev.value for ev in loaded.evals],
+                         [ev.cost_seconds for ev in loaded.evals])
         if self.config.verbose and len(loaded):
             print(f"[tuner] resumed {len(loaded)} evaluations from {path}")
 
-    def _evaluate_batch(self, points: List[Dict]) -> List[EvalResult]:
+    # -- shared helpers ------------------------------------------------------
+    def _report(self, r: EvalResult) -> None:
+        if not self.config.verbose:
+            return
+        best = (self.history.best().value
+                if any(math.isfinite(e.value) for e in self.history.evals)
+                else float("nan"))
+        print(
+            f"[tuner:{self.engine.name}] it={len(self.history):3d} "
+            f"y={r.value:.4g} best={best:.4g} "
+            f"({r.cost_seconds:.1f}s) {r.point}"
+        )
+
+    def _record(self, r: EvalResult) -> None:
+        """tell + append + checkpoint for one completed evaluation."""
+        self.engine.tell([r.point], [r.value], [r.cost_seconds])
+        self.history.add(r.point, r.value, r.cost_seconds, r.meta)
+        if self.config.checkpoint_path:
+            self.history.save(self.config.checkpoint_path)
+        self._report(r)
+
+    def _wall_clock_exhausted(self, wall_clock: Optional[float]) -> None:
+        if self.config.verbose:
+            print(f"[tuner:{self.engine.name}] wall-clock budget "
+                  f"({wall_clock:.1f}s) exhausted at "
+                  f"{len(self.history)} evaluations")
+
+    # -- completion-driven loop (default) ------------------------------------
+    def _run_async(self, budget: int, wall_clock: Optional[float]) -> History:
+        t_start = time.time()
+        deadline = t_start + wall_clock if wall_clock is not None else None
+        outstanding: List[PendingEval] = []
+        try:
+            while len(self.history) < budget:
+                if deadline is not None and time.time() >= deadline:
+                    self._wall_clock_exhausted(wall_clock)
+                    break
+                # refill: one ask per free worker slot, the moment it frees
+                capacity = self.config.parallelism - len(outstanding)
+                want = min(capacity,
+                           budget - len(self.history) - len(outstanding))
+                asked_any = False
+                if want > 0:
+                    points = self.engine.ask(want, self.history)
+                    asked_any = bool(points)
+                    submitted = []
+                    for p in points[:want]:
+                        cached = self.history.lookup(p)
+                        if cached is not None:
+                            # memoized repeat query: free, told immediately
+                            self._record(EvalResult(dict(p), cached.value,
+                                                    0.0, {"memoized": True}))
+                            continue
+                        if self.history.pending(p):
+                            continue  # its measurement is already in flight
+                        submitted.append(p)
+                    if submitted:
+                        self.history.mark_inflight(submitted)
+                        outstanding.extend(self.executor.submit(submitted))
+                if len(self.history) >= budget:
+                    break
+                if not outstanding:
+                    if not asked_any:
+                        break  # engine has nothing left to propose
+                    continue  # asks were all memo hits; go ask again
+                done = self.executor.next_completed(outstanding,
+                                                    deadline=deadline)
+                if done is None:  # deadline passed while waiting
+                    self._wall_clock_exhausted(wall_clock)
+                    break
+                outstanding.remove(done)
+                self._record(done.result())
+        finally:
+            # abandoned in-flight points (wall-clock expiry / hard abort)
+            # must not leave stale pending marks behind; anything still
+            # marked here is by definition unmeasured (add() unmarks on
+            # completion), so clearing the whole set is exact
+            self.history.clear_inflight()
+        return self.history
+
+    # -- legacy batch-barrier loop -------------------------------------------
+    def _evaluate_batch(self, points: List[Dict],
+                        deadline: Optional[float] = None) -> List[EvalResult]:
         """History-memoized repeats are free; the rest go to the executor."""
         results: List[Optional[EvalResult]] = [None] * len(points)
         miss_idx, miss_points = [], []
@@ -120,23 +244,19 @@ class Tuner:
                 miss_idx.append(i)
                 miss_points.append(p)
         if miss_points:
-            for i, r in zip(miss_idx, self.executor.evaluate(miss_points)):
+            for i, r in zip(miss_idx,
+                            self.executor.evaluate(miss_points,
+                                                   deadline=deadline)):
                 results[i] = r
         return results
 
-    def run(self, budget: Optional[int] = None,
-            wall_clock: Optional[float] = None) -> History:
-        budget = budget if budget is not None else self.config.budget
-        wall_clock = (wall_clock if wall_clock is not None
-                      else self.config.wall_clock_budget)
+    def _run_batch(self, budget: int, wall_clock: Optional[float]) -> History:
         batch_size = self.config.batch_size or max(1, self.config.parallelism)
         t_start = time.time()
+        deadline = t_start + wall_clock if wall_clock is not None else None
         while len(self.history) < budget:
-            if wall_clock is not None and time.time() - t_start >= wall_clock:
-                if self.config.verbose:
-                    print(f"[tuner:{self.engine.name}] wall-clock budget "
-                          f"({wall_clock:.1f}s) exhausted at "
-                          f"{len(self.history)} evaluations")
+            if deadline is not None and time.time() >= deadline:
+                self._wall_clock_exhausted(wall_clock)
                 break
             points = self.engine.ask(
                 min(batch_size, budget - len(self.history)), self.history)
@@ -144,26 +264,46 @@ class Tuner:
                 break  # engine has nothing left to propose
             self.history.mark_inflight(points)
             try:
-                results = self._evaluate_batch(points)
+                results = self._evaluate_batch(points, deadline=deadline)
             finally:
                 self.history.clear_inflight(points)
-            self.engine.tell(points, [r.value for r in results])
-            self.history.add_batch(
-                points, [r.value for r in results],
-                [r.cost_seconds for r in results], [r.meta for r in results])
-            if self.config.checkpoint_path:
-                self.history.save(self.config.checkpoint_path)
-            if self.config.verbose:
-                best = (self.history.best().value
-                        if any(math.isfinite(e.value) for e in self.history.evals)
-                        else float("nan"))
-                for r in results:
-                    print(
-                        f"[tuner:{self.engine.name}] it={len(self.history):3d} "
-                        f"y={r.value:.4g} best={best:.4g} "
-                        f"({r.cost_seconds:.1f}s) {r.point}"
-                    )
+            # a None slot was abandoned at the wall-clock deadline: it was
+            # never measured, so it enters neither the engine nor history
+            done = [(p, r) for p, r in zip(points, results) if r is not None]
+            if done:
+                pts, rs = [p for p, _ in done], [r for _, r in done]
+                self.engine.tell(pts, [r.value for r in rs],
+                                 [r.cost_seconds for r in rs])
+                self.history.add_batch(
+                    pts, [r.value for r in rs],
+                    [r.cost_seconds for r in rs], [r.meta for r in rs])
+                if self.config.checkpoint_path:
+                    self.history.save(self.config.checkpoint_path)
+                if self.config.verbose:
+                    for r in rs:
+                        self._report(r)
         return self.history
+
+    def run(self, budget: Optional[int] = None,
+            wall_clock: Optional[float] = None) -> History:
+        budget = budget if budget is not None else self.config.budget
+        wall_clock = (wall_clock if wall_clock is not None
+                      else self.config.wall_clock_budget)
+        if (wall_clock is not None and self.executor.backend == "serial"
+                and self.config.executor_backend is None):
+            # a wall-clock budget supplied at run() time needs the same
+            # pool fallback __init__ applies for a configured one: the
+            # serial backend cannot abandon a running evaluation.  The
+            # memo cache (and its disk store) carries over.
+            old = self.executor
+            self.executor = EvaluationExecutor(
+                self.objective, self.space,
+                parallelism=self.config.parallelism, backend="thread",
+                timeout=self.config.eval_timeout, cache=old.cache)
+            old.close()
+        if self.config.loop == "batch":
+            return self._run_batch(budget, wall_clock)
+        return self._run_async(budget, wall_clock)
 
     def close(self) -> None:
         self.executor.close()

@@ -18,7 +18,6 @@ import functools
 from typing import Optional
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels import decode_attention as _decode_mod
 from repro.kernels import flash_attention as _flash_mod

@@ -26,7 +26,7 @@ import json
 import sys
 import time
 import traceback
-from typing import Dict, Optional, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

@@ -13,15 +13,22 @@ mesh with the candidate BackendConfig and returns roofline throughput;
 OOM configurations fail (-inf) like crashed measurements in the paper.
 This driver is also the §Perf hillclimbing engine.
 
-Batched evaluation: engines are *asked* for ``--parallelism`` candidates
-per round and the executor compiles them concurrently (XLA compilation
-releases the GIL, so the default thread backend scales).  ``--wall-clock``
-caps tuning by seconds instead of / in addition to iterations, and
+Completion-driven evaluation: the engine keeps ``--parallelism`` workers
+full and is told each result the moment its compile finishes (XLA
+compilation releases the GIL, so the default thread backend scales); no
+worker idles behind one slow configuration.  ``--loop batch`` restores
+the legacy per-batch barrier for comparison.  ``--wall-clock`` caps
+tuning by seconds instead of / in addition to iterations and bounds
+in-flight work: compiles still unfinished at the deadline are abandoned
+unrecorded (enforceable with the pool backends, which a wall-clock
+budget selects by default; a forced serial backend can only stop
+between evaluations), and
 ``--eval-timeout`` scores any configuration that compiles for too long
-as a failure instead of stalling the run.
+as a failure instead of stalling the run.  ``--memo-cache`` persists
+every measurement to a file-locked on-disk store, so repeated or resumed
+runs (and other hosts sharing the filesystem) re-evaluate nothing.
 """
 import argparse
-import json
 import math
 import pathlib
 
@@ -53,7 +60,14 @@ def main(argv=None):
                     help="seconds per evaluation before it scores -inf")
     ap.add_argument("--wall-clock", type=float, default=None,
                     help="stop tuning after this many seconds (wall-clock "
-                         "budget mode; combines with --budget)")
+                         "budget mode; combines with --budget; also bounds "
+                         "in-flight evaluations)")
+    ap.add_argument("--loop", default="async", choices=["async", "batch"],
+                    help="async = completion-driven scheduler (default); "
+                         "batch = legacy per-batch barrier")
+    ap.add_argument("--memo-cache", default=None,
+                    help="disk-backed memo cache of evaluated points "
+                         "(atomic + file-locked; shared across runs/hosts)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -72,7 +86,9 @@ def main(argv=None):
                     parallelism=args.parallelism,
                     executor_backend=args.executor_backend,
                     eval_timeout=args.eval_timeout,
-                    wall_clock_budget=args.wall_clock),
+                    wall_clock_budget=args.wall_clock,
+                    loop=args.loop,
+                    memo_cache_path=args.memo_cache),
     )
     history = tuner.run()
     tuner.close()

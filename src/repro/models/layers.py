@@ -243,7 +243,6 @@ def mla_apply(
 ) -> Tuple[jax.Array, Optional[dict]]:
     m = cfg.mla
     B, S, D = x.shape
-    h = cfg.num_heads
     dn, dr, dv = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
     scale = (dn + dr) ** -0.5
     xc = _dt(x, rt)

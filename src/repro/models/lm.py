@@ -12,7 +12,6 @@ launcher can shard it (seq over "model", batch over "data"/"pod").
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional, Tuple
 
 import jax
@@ -22,7 +21,7 @@ from jax.ad_checkpoint import checkpoint_name
 from repro.configs.base import ModelConfig
 from repro.distributed.sharding import shard_hint
 from repro.models import layers as L
-from repro.models.params import P, dense_init, split_params, stack_layer_params
+from repro.models.params import P, dense_init, stack_layer_params
 from repro.models.runtime import Runtime
 
 MIXER_INIT = {

@@ -11,9 +11,8 @@ m/v shard exactly like their parameter).
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

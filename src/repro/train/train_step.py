@@ -8,7 +8,7 @@ that SPMD inserts for data-parallel gradients happens once, after the scan
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

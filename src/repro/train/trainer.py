@@ -9,11 +9,10 @@ step — the deterministic data pipeline replays the identical stream.
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional
+from dataclasses import dataclass
+from typing import Dict, List, Optional
 
 import jax
-import numpy as np
 
 from repro.checkpoint.checkpointer import Checkpointer
 from repro.configs.base import ModelConfig

@@ -1,0 +1,119 @@
+"""Disk-backed cache stores for measurement memoization.
+
+A tuning run's dominant cost is the measurement (lower + compile + run),
+not the suggestion, so every completed evaluation is worth persisting:
+repeated runs, resumed runs, and multiple hosts sharing a filesystem
+should never re-measure a configuration.  This module provides the
+storage layer behind both the executor's :class:`MemoCache` and the
+``RooflineEvaluator``'s compile cache:
+
+* :class:`CacheStore` — the abstract contract: ``load() -> {key: record}``
+  plus ``put(key, record)`` / ``put_many(records)``, where keys are
+  strings and records are JSON-serializable dicts.
+* :class:`JsonCacheStore` — a single JSON file with **atomic writes**
+  (write to a sidecar temp file, then ``os.replace``) and
+  **cross-process file locking** (POSIX ``flock`` on a ``.lock``
+  sidecar), so concurrent writers on one host — or on several hosts
+  sharing a POSIX filesystem with coherent locks — merge their entries
+  instead of clobbering each other.  Every ``put`` is read-merge-write
+  under the lock: last-writer-wins per key, union across keys.
+* :class:`NullCacheStore` — the no-op store used when persistence is
+  disabled; keeps callers free of ``if store is not None`` branches.
+
+The on-disk format is a plain JSON object mapping key strings to
+records, which is exactly the format the ``RooflineEvaluator`` has
+always written — existing cache files load unchanged.
+"""
+from __future__ import annotations
+
+import contextlib
+import json
+import os
+import pathlib
+from typing import Any, Dict
+
+try:  # POSIX file locking; degrade to lockless on platforms without it
+    import fcntl
+except ImportError:  # pragma: no cover - non-POSIX
+    fcntl = None
+
+
+class CacheStore:
+    """Abstract persistent key->record store (string keys, JSON records)."""
+
+    def load(self) -> Dict[str, Any]:
+        raise NotImplementedError
+
+    def put(self, key: str, record: Any) -> None:
+        raise NotImplementedError
+
+    def put_many(self, records: Dict[str, Any]) -> None:
+        for k, v in records.items():
+            self.put(k, v)
+
+
+class NullCacheStore(CacheStore):
+    """Persistence disabled: loads empty, drops every put."""
+
+    def load(self) -> Dict[str, Any]:
+        return {}
+
+    def put(self, key: str, record: Any) -> None:
+        pass
+
+    def put_many(self, records: Dict[str, Any]) -> None:
+        pass
+
+
+class JsonCacheStore(CacheStore):
+    """One JSON file, atomic replace writes, ``flock``-guarded merges."""
+
+    def __init__(self, path):
+        self.path = pathlib.Path(path)
+        self.lock_path = self.path.with_name(self.path.name + ".lock")
+
+    @contextlib.contextmanager
+    def _locked(self):
+        self.lock_path.parent.mkdir(parents=True, exist_ok=True)
+        if fcntl is None:  # pragma: no cover - non-POSIX
+            yield
+            return
+        with open(self.lock_path, "w") as lf:
+            fcntl.flock(lf.fileno(), fcntl.LOCK_EX)
+            try:
+                yield
+            finally:
+                fcntl.flock(lf.fileno(), fcntl.LOCK_UN)
+
+    def _read(self) -> Dict[str, Any]:
+        if not self.path.exists():
+            return {}
+        text = self.path.read_text()
+        if not text.strip():
+            return {}
+        return json.loads(text)
+
+    def _write(self, data: Dict[str, Any]) -> None:
+        tmp = self.path.with_name(self.path.name + ".tmp")
+        tmp.write_text(json.dumps(data, default=str))
+        os.replace(tmp, self.path)  # atomic: readers never see a torn file
+
+    def load(self) -> Dict[str, Any]:
+        with self._locked():
+            return self._read()
+
+    def put(self, key: str, record: Any) -> None:
+        self.put_many({key: record})
+
+    def put_many(self, records: Dict[str, Any]) -> None:
+        if not records:
+            return
+        with self._locked():
+            data = self._read()
+            data.update(records)
+            self._write(data)
+
+
+def open_store(path=None) -> CacheStore:
+    """``None`` -> :class:`NullCacheStore`; else a :class:`JsonCacheStore`."""
+    return NullCacheStore() if path is None else JsonCacheStore(path)

@@ -10,7 +10,7 @@ number.)  est_step_time = max of the three; throughput = tokens / est.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, Optional
 
 # TPU v5e hardware constants (per chip)
@@ -250,7 +250,6 @@ def analytic_hbm_traffic(cfg, shape, bc, chips: int) -> Dict[str, float]:
             layer += 2 * bsd + 3 * B_dev * S * ff * bpe
         elif fk == "moe":
             m = cfg.moe
-            e_dev = shard(m.num_experts, tp)
             cf = bc.capacity_factor or m.capacity_factor
             tokens_dev = B_dev * S * m.top_k * cf
             ff = m.d_expert if m.num_experts % tp == 0 else shard(m.d_expert, tp)

@@ -8,6 +8,12 @@
   report the roofline-estimated throughput (tokens/second).  A
   configuration whose per-device footprint exceeds HBM is a *failed run*
   (-inf), exactly like a crashed measurement in the paper's harness.
+  ``cache_path`` persists every compile+analysis through the shared
+  :class:`~repro.tuning.cache.JsonCacheStore` (atomic writes,
+  cross-process file locking), so concurrent tuning runs — even on
+  different hosts sharing a filesystem — merge their measurements
+  instead of clobbering each other; the on-disk format is unchanged
+  from the historical plain-JSON cache.
 
 Both implement the explicit evaluator protocol
 (``repro.tuning.objective.Evaluator``): ``__call__(point) -> (value,
@@ -18,13 +24,12 @@ from __future__ import annotations
 
 import json
 import math
-import pathlib
 import time
 from typing import Callable, Dict, Optional, Tuple
 
 import jax
-import numpy as np
 
+from repro.tuning.cache import CacheStore, open_store
 from repro.tuning.cost_model import HBM_BYTES
 from repro.tuning.objective import Evaluator
 from repro.tuning.parameters import BASELINE, BackendConfig, config_from_point
@@ -48,10 +53,8 @@ class RooflineEvaluator(Evaluator):
         self.chips_per_pod = chips_per_pod
         self.base = base
         self.hbm_bytes = hbm_bytes
-        self.cache_path = pathlib.Path(cache_path) if cache_path else None
-        self._cache: Dict[str, dict] = {}
-        if self.cache_path and self.cache_path.exists():
-            self._cache = json.loads(self.cache_path.read_text())
+        self.store: CacheStore = open_store(cache_path)
+        self._cache: Dict[str, dict] = self.store.load()
 
     def _key(self, bc: BackendConfig) -> str:
         return json.dumps(
@@ -71,9 +74,9 @@ class RooflineEvaluator(Evaluator):
                 bc=bc, chips_per_pod=self.chips_per_pod,
             )
             self._cache[key] = rec
-            if self.cache_path:
-                self.cache_path.parent.mkdir(parents=True, exist_ok=True)
-                self.cache_path.write_text(json.dumps(self._cache, default=str))
+            # merge-on-write under the store's file lock: concurrent tuning
+            # runs sharing one cache file union their entries
+            self.store.put(key, rec)
         if rec.get("skipped"):
             return -math.inf, {"skip_reason": rec["skip_reason"]}
         mem = rec["memory"]["per_device_B"]

@@ -1,28 +1,44 @@
 """Parallel evaluation executor — the measurement side of ask/tell.
 
-The tuner asks an engine for a batch of candidate points and hands the
-batch here.  The executor runs the objective over a worker pool with:
+The executor owns the worker pool and the memoization of completed
+measurements.  It speaks two protocols:
+
+* **batch** — ``evaluate(points) -> [EvalResult]`` runs a whole batch
+  and returns results in submission order (the legacy barrier loop and
+  standalone drivers use this);
+* **completion-driven** — ``submit(points) -> [PendingEval]`` dispatches
+  work without waiting and ``next_completed(pendings)`` blocks until
+  *any* one of them finishes, so a driver can ``tell`` results the
+  moment they land and refill the freed worker instead of idling the
+  pool at a per-batch barrier.  ``as_completed(pendings)`` is the
+  generator convenience over the same mechanism.
+
+Shared semantics across both protocols:
 
 * **failure isolation** — an objective that raises scores ``-inf`` (the
   paper's failed-run semantics for OOM/compile crashes) and the pool
   survives;
 * **per-evaluation timeout** — a configuration that exceeds ``timeout``
-  seconds scores ``-inf`` with ``meta={"timeout": True}``.  The stuck
-  worker is abandoned, not joined, so the batch still completes.  The
-  clock starts at batch dispatch; a task still queued when its wait
-  expires is cancelled and measured inline instead of being falsely
+  seconds scores ``-inf`` with ``meta={"timeout": True}`` (the paper's
+  failed-run semantics: this configuration is too slow to measure).  The
+  stuck worker is abandoned, not joined, so other evaluations keep
+  flowing.  The clock starts at dispatch; a task still queued when its
+  wait expires is cancelled and measured inline instead of being falsely
   recorded as a failure;
-* **shared memo cache** — completed evaluations (including failures and
-  timeouts) are memoized by grid key, so repeated queries across batches
-  are free when the executor is used standalone or shared between
-  drivers.  (Inside a :class:`~repro.core.tuner.Tuner`, the history
-  already memoizes repeats before they reach the executor; this cache is
-  the executor's own guarantee, not the tuner's.)  With the process
-  backend it is backed by a ``multiprocessing.Manager`` dict, making it
-  safe to share across processes;
-* **deterministic ordering** — results come back in submission order
-  regardless of completion order, so engine ``tell`` and the history
-  stay reproducible.
+* **wall-clock deadline** — ``next_completed``/``evaluate`` accept an
+  absolute ``deadline`` (how the tuner bounds in-flight work against its
+  ``wall_clock_budget``).  A deadline expiry is a *budget artifact of
+  this run*, not a property of the configuration, so unfinished
+  evaluations are **abandoned** at the deadline: nothing is recorded and
+  nothing is cached, and a later run measures them normally;
+* **shared memo cache** — completed evaluations (including failures) are
+  memoized by grid key.  Pass ``cache_path`` (or a :class:`MemoCache`
+  built on a :class:`~repro.tuning.cache.CacheStore`) to back the memo
+  with an on-disk JSON store with atomic writes and cross-process file
+  locking: repeated runs, resumed runs, and multiple hosts sharing a
+  filesystem then reuse every measurement instead of re-compiling it.
+  Timeout results stay in the in-memory memo only — a ``-inf`` under one
+  run's timeout setting must not permanently poison the cross-run store;
 
 Backends:
 
@@ -38,18 +54,22 @@ Backends:
 """
 from __future__ import annotations
 
+import json
 import math
 import threading
 import time
 from concurrent.futures import (
+    FIRST_COMPLETED,
     ProcessPoolExecutor,
     ThreadPoolExecutor,
+    wait,
 )
 from concurrent.futures import TimeoutError as FutureTimeoutError
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, Iterator, List, Optional, Sequence
 
 from repro.core.space import SearchSpace
+from repro.tuning.cache import CacheStore, open_store
 from repro.tuning.objective import Evaluator, as_evaluator
 
 BACKENDS = ("serial", "thread", "process")
@@ -79,30 +99,92 @@ def run_objective(objective: Evaluator, point: Dict):
     return value, time.time() - t0, meta
 
 
-class MemoCache:
-    """Shared memo of completed evaluations, keyed by ``space.key(point)``."""
+def _store_key(key) -> str:
+    """Stable string form of a grid key for the on-disk store."""
+    return json.dumps(list(key), default=str)
 
-    def __init__(self, backing=None, lock=None):
+
+class MemoCache:
+    """Shared memo of completed evaluations, keyed by ``space.key(point)``.
+
+    Optionally write-through to a :class:`~repro.tuning.cache.CacheStore`
+    so entries persist across processes, runs, and hosts.  Records are
+    stored as ``{"point", "value", "cost_seconds", "meta"}`` so a
+    different process can re-derive the grid key from the point under
+    its own ``SearchSpace``.
+    """
+
+    def __init__(self, backing=None, lock=None, store: Optional[CacheStore] = None):
         self._d = {} if backing is None else backing
         self._lock = lock if lock is not None else threading.Lock()
+        self._store = store if store is not None else open_store(None)
 
     @classmethod
-    def process_safe(cls) -> "MemoCache":
+    def process_safe(cls, store: Optional[CacheStore] = None) -> "MemoCache":
         import multiprocessing
 
         manager = multiprocessing.Manager()
-        return cls(backing=manager.dict(), lock=manager.Lock())
+        return cls(backing=manager.dict(), lock=manager.Lock(), store=store)
+
+    def load_store(self, space: SearchSpace) -> int:
+        """Seed the in-memory memo from the persistent store; return count."""
+        n = 0
+        for rec in self._store.load().values():
+            key = space.key(rec["point"])
+            with self._lock:
+                if key not in self._d:
+                    self._d[key] = EvalResult(
+                        dict(rec["point"]), float(rec["value"]),
+                        float(rec.get("cost_seconds", 0.0)),
+                        dict(rec.get("meta") or {}))
+                    n += 1
+        return n
 
     def get(self, key) -> Optional[EvalResult]:
         with self._lock:
             return self._d.get(key)
 
-    def put(self, key, result: EvalResult) -> None:
+    def put(self, key, result: EvalResult, persist: bool = True) -> None:
         with self._lock:
             self._d[key] = result
+        if persist:
+            self._store.put(_store_key(key), {
+                "point": result.point, "value": result.value,
+                "cost_seconds": result.cost_seconds, "meta": result.meta,
+            })
 
     def __len__(self) -> int:
         return len(self._d)
+
+
+class PendingEval:
+    """A dispatched evaluation: completed (``done()``) or still running.
+
+    ``deadline`` is the absolute time by which the evaluation must have
+    produced a result; past it, ``next_completed`` resolves the pending
+    to ``-inf`` with ``meta={"timeout": True}`` (or measures it inline
+    if the pool never actually started it).
+    """
+
+    __slots__ = ("point", "key", "index", "submitted_at", "deadline",
+                 "future", "_result")
+
+    def __init__(self, point, key, index, future=None, result=None,
+                 deadline=None):
+        self.point = point
+        self.key = key
+        self.index = index
+        self.submitted_at = time.time()
+        self.deadline = deadline
+        self.future = future
+        self._result = result
+
+    def done(self) -> bool:
+        return self._result is not None
+
+    def result(self) -> EvalResult:
+        assert self._result is not None, "pending evaluation not complete"
+        return self._result
 
 
 class EvaluationExecutor:
@@ -115,6 +197,7 @@ class EvaluationExecutor:
         backend: Optional[str] = None,
         timeout: Optional[float] = None,
         cache: Optional[MemoCache] = None,
+        cache_path: Optional[str] = None,
     ):
         self.objective = as_evaluator(objective)
         self.space = space
@@ -129,13 +212,23 @@ class EvaluationExecutor:
             raise ValueError(
                 f"unknown executor backend {self.backend!r}; one of {BACKENDS}")
         self.timeout = timeout
+        if cache is not None and cache_path is not None:
+            raise ValueError(
+                "pass either cache= (a shared MemoCache, which carries its "
+                "own store) or cache_path=, not both — cache_path would be "
+                "silently ignored")
+        store = open_store(cache_path) if cache_path else None
         if cache is not None:
             self.cache = cache
         elif self.backend == "process":
-            self.cache = MemoCache.process_safe()
+            self.cache = MemoCache.process_safe(store=store)
         else:
-            self.cache = MemoCache()
+            self.cache = MemoCache(store=store)
+        if store is not None:
+            self.cache.load_store(space)
         self._pool = None
+        self._inflight: Dict = {}  # grid key -> future currently measuring it
+        self._seq = 0  # monotonic submission index (orders completions)
 
     def _get_pool(self):
         if self._pool is None:
@@ -145,10 +238,162 @@ class EvaluationExecutor:
                 self._pool = ProcessPoolExecutor(max_workers=self.parallelism)
         return self._pool
 
-    # -- evaluation ----------------------------------------------------------
-    def evaluate(self, points: List[Dict]) -> List[EvalResult]:
-        """Evaluate a batch; results in submission order."""
+    # -- completion-driven protocol ------------------------------------------
+    def submit(self, points: Sequence[Dict]) -> List[PendingEval]:
+        """Dispatch evaluations without waiting; returns one pending each.
+
+        Memo-cache hits come back already completed (zero cost,
+        ``meta["memoized"]``).  Duplicate keys already in flight share
+        the running measurement instead of re-dispatching it.  Each
+        dispatched pending carries a per-evaluation deadline of
+        ``now + timeout`` (when a timeout is set); wall-clock budgeting
+        is the *caller's* deadline, passed to ``next_completed``.
+        """
+        out: List[PendingEval] = []
+        for p in points:
+            key = self.space.key(p)
+            self._seq += 1
+            hit = self.cache.get(key)
+            if hit is not None:
+                out.append(PendingEval(
+                    dict(p), key, self._seq,
+                    result=EvalResult(dict(p), hit.value, 0.0,
+                                      dict(hit.meta, memoized=True))))
+                continue
+            eval_deadline = (time.time() + self.timeout
+                             if self.timeout is not None else None)
+            stale = self._inflight.get(key)
+            if stale is not None and stale.done():
+                # a previously abandoned measurement finished after its
+                # driver moved on: harvest it into the cache now
+                self._harvest(key, stale)
+                hit = self.cache.get(key)
+                out.append(PendingEval(
+                    dict(p), key, self._seq,
+                    result=EvalResult(dict(p), hit.value, 0.0,
+                                      dict(hit.meta, memoized=True))))
+                continue
+            if stale is not None:
+                out.append(PendingEval(dict(p), key, self._seq, future=stale,
+                                       deadline=eval_deadline))
+                continue
+            if self.backend == "serial":
+                out.append(PendingEval(dict(p), key, self._seq,
+                                       result=self._run_one(p)))
+                r = out[-1].result()
+                self.cache.put(key, r, persist=not r.meta.get("timeout"))
+                continue
+            fut = self._get_pool().submit(run_objective, self.objective, p)
+            self._inflight[key] = fut
+            out.append(PendingEval(dict(p), key, self._seq, future=fut,
+                                   deadline=eval_deadline))
+        return out
+
+    def _harvest(self, key, future) -> None:
+        """Bank an abandoned-but-finished measurement into the memo."""
+        value, secs, meta = future.result()
+        if self._inflight.get(key) is future:
+            del self._inflight[key]
+        point = dict(zip(self.space.names, key))
+        self.cache.put(key, EvalResult(point, value, secs, meta))
+
+    def _finalize(self, pending: PendingEval) -> None:
+        """Turn a completed future into the pending's EvalResult + memo."""
+        value, secs, meta = pending.future.result()
+        if self._inflight.get(pending.key) is pending.future:
+            del self._inflight[pending.key]
+            pending._result = EvalResult(dict(pending.point), value, secs,
+                                         meta)
+            self.cache.put(pending.key, pending._result)
+        else:
+            # an alias of a measurement another pending already finalized:
+            # like every memoized path, it costs 0.0 — charging the full
+            # measurement twice would inflate cost accounting downstream
+            pending._result = EvalResult(dict(pending.point), value, 0.0,
+                                         dict(meta, memoized=True))
+
+    def _resolve_timeout(self, pending: PendingEval, now: float) -> None:
+        """Per-evaluation timeout expiry (never wall-clock expiry)."""
+        if self._inflight.get(pending.key) is pending.future:
+            del self._inflight[pending.key]
+        if pending.future.cancel():
+            # never started (pool starved by earlier slow evals): this point
+            # was not measured at all, so give it its run inline rather than
+            # recording a bogus failure
+            pending._result = self._run_one(pending.point)
+        else:
+            # genuinely running too long: abandon the stuck worker (it is
+            # not joined); the pool survives
+            secs = (float(self.timeout) if self.timeout is not None
+                    else now - pending.submitted_at)
+            pending._result = EvalResult(dict(pending.point), -math.inf,
+                                         secs, {"timeout": True})
+        # memoize within this run, but never persist a timeout verdict to
+        # the cross-run store: it reflects this run's timeout setting, not
+        # the configuration itself
+        self.cache.put(pending.key, pending._result,
+                       persist=not pending._result.meta.get("timeout"))
+
+    def next_completed(self, pendings: Sequence[PendingEval],
+                       deadline: Optional[float] = None,
+                       ) -> Optional[PendingEval]:
+        """Block until any pending completes; return it (submission-order
+        tie-break when several are ready).  Returns ``None`` only when
+        ``deadline`` passes with nothing resolvable — timed-out
+        evaluations resolve to ``-inf`` results, not to ``None``."""
+        pendings = sorted(pendings, key=lambda p: p.index)
+        while True:
+            for p in pendings:
+                if p.done():
+                    return p
+            if not pendings:
+                return None
+            now = time.time()
+            waits = [p.deadline - now for p in pendings
+                     if p.deadline is not None]
+            if deadline is not None:
+                waits.append(deadline - now)
+            wait_s = max(0.0, min(waits)) if waits else None
+            done, _ = wait({p.future for p in pendings}, timeout=wait_s,
+                           return_when=FIRST_COMPLETED)
+            if done:
+                for p in pendings:
+                    if p.future in done:
+                        self._finalize(p)
+                        return p
+            now = time.time()
+            for p in pendings:
+                if p.deadline is not None and now >= p.deadline:
+                    self._resolve_timeout(p, now)
+                    return p
+            if deadline is not None and now >= deadline:
+                return None
+
+    def as_completed(self, pendings: Sequence[PendingEval],
+                     deadline: Optional[float] = None,
+                     ) -> Iterator[PendingEval]:
+        """Yield pendings as they complete (completion order)."""
+        remaining = list(pendings)
+        while remaining:
+            p = self.next_completed(remaining, deadline=deadline)
+            if p is None:
+                return
+            remaining.remove(p)
+            yield p
+
+    # -- batch protocol ------------------------------------------------------
+    def evaluate(self, points: List[Dict],
+                 deadline: Optional[float] = None) -> List[Optional[EvalResult]]:
+        """Evaluate a batch; results in submission order.
+
+        With a ``deadline``, evaluations not finished when it passes are
+        *abandoned*: their slot in the returned list is ``None`` (not a
+        fake ``-inf``), nothing is cached, and a later run measures them
+        normally.  Per-evaluation ``timeout`` expiries still resolve to
+        ``-inf`` timeout results as always.
+        """
         results: List[Optional[EvalResult]] = [None] * len(points)
+        abandoned = [False] * len(points)
         todo: List[int] = []  # indices that miss the memo cache
         first_at: Dict = {}  # key -> index of first in-batch occurrence
         for i, p in enumerate(points):
@@ -166,17 +411,43 @@ class EvaluationExecutor:
         if todo:
             if self.backend == "serial":
                 for i in todo:
+                    if deadline is not None and time.time() >= deadline:
+                        abandoned[i] = True  # budget spent: don't even start
+                        continue
                     results[i] = self._run_one(points[i])
             else:
                 pool = self._get_pool()
                 futures = [(i, pool.submit(run_objective, self.objective,
                                            points[i]))
                            for i in todo]
+                dispatched_at = time.time()
                 for i, fut in futures:
+                    wait_s = self.timeout
+                    if deadline is not None:
+                        left = max(0.0, deadline - time.time())
+                        wait_s = left if wait_s is None else min(wait_s, left)
                     try:
-                        value, secs, meta = fut.result(timeout=self.timeout)
+                        value, secs, meta = fut.result(timeout=wait_s)
                     except FutureTimeoutError:
+                        timed_out = (self.timeout is not None and
+                                     time.time() - dispatched_at
+                                     >= self.timeout)
+                        if not timed_out:
+                            # pure wall-clock expiry: a budget artifact of
+                            # this run, not a failed configuration — abandon
+                            # (queued tasks are cancelled, running workers
+                            # left to finish unrecorded)
+                            fut.cancel()
+                            abandoned[i] = True
+                            continue
                         if fut.cancel():
+                            if (deadline is not None
+                                    and time.time() >= deadline):
+                                # starved AND out of budget: abandoning beats
+                                # an inline measurement that would overshoot
+                                # the wall clock unboundedly
+                                abandoned[i] = True
+                                continue
                             # never started (pool starved by earlier slow
                             # evals): this point was not measured at all, so
                             # give it its run inline rather than recording a
@@ -189,11 +460,15 @@ class EvaluationExecutor:
                                              {"timeout": True})
                     results[i] = EvalResult(dict(points[i]), value, secs, meta)
             for i in todo:
-                self.cache.put(self.space.key(points[i]), results[i])
+                if results[i] is not None:
+                    self.cache.put(self.space.key(points[i]), results[i],
+                                   persist=not results[i].meta.get("timeout"))
 
         for i, p in enumerate(points):  # resolve in-batch duplicates
-            if results[i] is None:
+            if results[i] is None and not abandoned[i]:
                 src = results[first_at[self.space.key(p)]]
+                if src is None:
+                    continue  # its source was abandoned at the deadline
                 results[i] = EvalResult(dict(p), src.value, 0.0,
                                         dict(src.meta, memoized=True))
         return results
@@ -209,6 +484,7 @@ class EvaluationExecutor:
         if self._pool is not None:
             self._pool.shutdown(wait=False, cancel_futures=True)
             self._pool = None
+        self._inflight.clear()
 
     def __enter__(self) -> "EvaluationExecutor":
         return self

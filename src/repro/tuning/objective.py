@@ -46,6 +46,25 @@ class FunctionEvaluator(Evaluator):
         return float(value), {}
 
 
+class CountingEvaluator(Evaluator):
+    """Wrap an evaluator and count real invocations.
+
+    Memoized results (history or disk-backed memo cache) never reach the
+    wrapped objective, so ``calls`` is the number of *actual*
+    measurements — the quantity a shared memo cache is supposed to drive
+    to zero on a repeated run.  Used by the cache-hit acceptance check in
+    ``benchmarks/perf_iterations.py`` and the async-loop tests.
+    """
+
+    def __init__(self, objective):
+        self.inner = as_evaluator(objective)
+        self.calls = 0
+
+    def __call__(self, point: Dict) -> Tuple[float, dict]:
+        self.calls += 1
+        return self.inner(point)
+
+
 def as_evaluator(objective) -> Evaluator:
     """Normalize any objective to the explicit (value, meta) protocol."""
     if getattr(objective, "returns_meta", False):

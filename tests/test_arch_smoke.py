@@ -103,8 +103,6 @@ def test_sliding_window_cache_is_bounded():
     cfg = get_config("h2o-danube-1.8b").reduced()
     model = build_model(cfg)
     cache, _ = split_params(model.init_cache(2, 100))
-    k_leaves = [v for k, v in jax.tree_util.tree_flatten_with_path(cache)[0]
-                if ".mixer" in jax.tree_util.keystr(k[ :-1]) or True]
     # every attn cache buffer seq dim is capped at the window
     shapes = [v.shape for v in jax.tree_util.tree_leaves(cache)
               if hasattr(v, "shape") and len(getattr(v, "shape", ())) == 5]

@@ -1,0 +1,166 @@
+"""Disk-backed memo persistence: JsonCacheStore atomicity + locking,
+MemoCache round-trips across executor instances, concurrent writers
+merging instead of clobbering, and the 0-re-evaluation guarantee for a
+repeated tuning run."""
+import json
+import math
+from concurrent.futures import ThreadPoolExecutor
+
+import pytest
+
+from repro.core import IntDim, SearchSpace, Tuner, TunerConfig
+from repro.tuning.cache import JsonCacheStore, NullCacheStore, open_store
+from repro.tuning.executor import EvalResult, EvaluationExecutor, MemoCache
+from repro.tuning.objective import CountingEvaluator
+
+
+def small_space() -> SearchSpace:
+    return SearchSpace([IntDim("a", 0, 9), IntDim("b", 0, 9)])
+
+
+# ---------------------------------------------------------------------------
+# store layer
+# ---------------------------------------------------------------------------
+
+def test_json_store_roundtrip_and_merge(tmp_path):
+    store = JsonCacheStore(tmp_path / "c.json")
+    assert store.load() == {}
+    store.put("k1", {"v": 1})
+    store.put("k2", {"v": 2})
+    assert store.load() == {"k1": {"v": 1}, "k2": {"v": 2}}
+    # a second store instance on the same path merges, not clobbers
+    other = JsonCacheStore(tmp_path / "c.json")
+    other.put("k3", {"v": 3})
+    assert set(store.load()) == {"k1", "k2", "k3"}
+    # no torn temp files left behind
+    assert not (tmp_path / "c.json.tmp").exists()
+
+
+def test_json_store_neg_inf_value_roundtrip(tmp_path):
+    """Failed configurations (-inf) must survive the JSON round trip."""
+    store = JsonCacheStore(tmp_path / "c.json")
+    store.put("oom", {"value": -math.inf, "point": {"a": 1}})
+    assert store.load()["oom"]["value"] == -math.inf
+
+
+def test_json_store_concurrent_writers_union(tmp_path):
+    """N writers, each with its own store instance, racing read-merge-write
+    on one file: the flock serializes them and every key survives."""
+    path = tmp_path / "c.json"
+
+    def writer(wid):
+        store = JsonCacheStore(path)  # own fd, contends on the lock file
+        for i in range(5):
+            store.put(f"w{wid}-{i}", {"wid": wid, "i": i})
+
+    with ThreadPoolExecutor(max_workers=8) as pool:
+        list(pool.map(writer, range(8)))
+    data = JsonCacheStore(path).load()
+    assert len(data) == 40
+    assert json.loads(path.read_text()) == data  # file itself is coherent
+
+
+def test_open_store_dispatch(tmp_path):
+    assert isinstance(open_store(None), NullCacheStore)
+    assert isinstance(open_store(tmp_path / "x.json"), JsonCacheStore)
+    null = open_store(None)
+    null.put("k", {})
+    assert null.load() == {}
+
+
+# ---------------------------------------------------------------------------
+# MemoCache on top of the store
+# ---------------------------------------------------------------------------
+
+def test_memo_cache_disk_roundtrip(tmp_path):
+    space = small_space()
+    store = JsonCacheStore(tmp_path / "memo.json")
+    cache = MemoCache(store=store)
+    cache.put(space.key({"a": 1, "b": 2}),
+              EvalResult({"a": 1, "b": 2}, 5.0, 0.25, {"m": 1}))
+    # a fresh cache (new process, conceptually) seeds itself from disk
+    fresh = MemoCache(store=JsonCacheStore(tmp_path / "memo.json"))
+    assert fresh.load_store(space) == 1
+    hit = fresh.get(space.key({"a": 1, "b": 2}))
+    assert hit.value == 5.0 and hit.cost_seconds == 0.25 and hit.meta == {"m": 1}
+
+
+def test_executor_memo_survives_restart(tmp_path):
+    """A new executor pointed at the same cache file re-evaluates nothing."""
+    space = small_space()
+    path = str(tmp_path / "memo.json")
+    counting = CountingEvaluator(lambda p: float(p["a"] * 10 + p["b"]))
+    pts = [{"a": i, "b": i} for i in range(4)]
+
+    ex1 = EvaluationExecutor(counting, space, parallelism=2, cache_path=path)
+    out1 = ex1.evaluate(pts)
+    ex1.close()
+    assert counting.calls == 4
+
+    ex2 = EvaluationExecutor(counting, space, parallelism=2, cache_path=path)
+    out2 = ex2.evaluate(pts)
+    ex2.close()
+    assert counting.calls == 4  # zero re-evaluations
+    assert [r.value for r in out2] == [r.value for r in out1]
+    assert all(r.meta.get("memoized") for r in out2)
+
+
+def test_executor_submit_next_completed_with_disk_cache(tmp_path):
+    """The completion-driven protocol hits the disk cache too: cached
+    submissions come back already done."""
+    space = small_space()
+    path = str(tmp_path / "memo.json")
+    counting = CountingEvaluator(lambda p: float(p["a"]))
+    pts = [{"a": i, "b": 0} for i in range(3)]
+
+    ex1 = EvaluationExecutor(counting, space, parallelism=2, cache_path=path)
+    for p in ex1.as_completed(ex1.submit(pts)):
+        assert p.result().value == pytest.approx(float(p.point["a"]))
+    ex1.close()
+    assert counting.calls == 3
+
+    ex2 = EvaluationExecutor(counting, space, parallelism=2, cache_path=path)
+    pend2 = ex2.submit(pts)
+    assert all(p.done() for p in pend2)  # resolved straight from disk
+    assert counting.calls == 3
+    ex2.close()
+
+
+# ---------------------------------------------------------------------------
+# end to end: second tuning run hits the cache, 0 re-evaluations
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("algo,par", [("random", 1), ("exhaustive", 4)])
+def test_second_tuning_run_zero_reevaluations(tmp_path, algo, par):
+    path = str(tmp_path / "memo.json")
+    counting = CountingEvaluator(lambda p: float(p["a"] * 10 + p["b"]))
+
+    def run():
+        t = Tuner(counting, small_space(),
+                  TunerConfig(algorithm=algo, budget=10, seed=0,
+                              verbose=False, parallelism=par,
+                              memo_cache_path=path))
+        h = t.run()
+        t.close()
+        return h
+
+    h1 = run()
+    first = counting.calls
+    assert first == 10
+    h2 = run()
+    assert counting.calls == first  # disk memo: 0 re-evaluations
+    assert sorted(e.value for e in h2.evals) == sorted(
+        e.value for e in h1.evals)
+    # cache hits are labeled so a run report can show what was reused
+    assert all(e.meta.get("memoized") for e in h2.evals)
+
+
+def test_roofline_evaluator_reads_legacy_cache_format(tmp_path):
+    """The store's on-disk format is the evaluator's historical plain-JSON
+    dict, so pre-existing cache files keep working."""
+    from repro.tuning.evaluator import RooflineEvaluator
+
+    legacy = tmp_path / "tune_cache.json"
+    legacy.write_text(json.dumps({"somekey": {"roofline": {"x": 1}}}))
+    ev = RooflineEvaluator("qwen2-0.5b", "train_4k", cache_path=str(legacy))
+    assert ev._cache == {"somekey": {"roofline": {"x": 1}}}

@@ -1,16 +1,13 @@
 """Cost-model units: analytic traffic, kernel credit, backend config."""
-import numpy as np
-import pytest
 
 from repro.configs import get_config, get_shape
 from repro.tuning.cost_model import (
-    HBM_BYTES,
     analytic_hbm_traffic,
     kernel_traffic_bytes,
     model_flops,
     tokens_per_step,
 )
-from repro.tuning.hlo_analysis import TrafficStats, traffic_analysis
+from repro.tuning.hlo_analysis import traffic_analysis
 from repro.tuning.parameters import BASELINE, BackendConfig, config_from_point
 
 

@@ -236,8 +236,9 @@ def test_process_backend_with_picklable_objective():
 # ---------------------------------------------------------------------------
 
 def test_mid_batch_checkpoint_resume(tmp_path):
-    """Kill a run mid-batch; the checkpoint holds only completed batches and
-    resuming finishes the job without duplicating evaluations."""
+    """Kill a run mid-batch (legacy barrier loop); the checkpoint holds only
+    completed batches and resuming finishes the job without duplicating
+    evaluations.  (The async-loop equivalent lives in test_async_loop.py.)"""
     ck = tmp_path / "t.json"
     state = {"evals": 0}
 
@@ -250,7 +251,7 @@ def test_mid_batch_checkpoint_resume(tmp_path):
     t1 = Tuner(obj, golden_space(),
                TunerConfig(algorithm="random", budget=16, seed=2,
                            verbose=False, parallelism=1, batch_size=4,
-                           checkpoint_path=str(ck)))
+                           loop="batch", checkpoint_path=str(ck)))
     with pytest.raises(KeyboardInterrupt):
         t1.run()
     # only the two completed batches made it into history + checkpoint
@@ -264,7 +265,7 @@ def test_mid_batch_checkpoint_resume(tmp_path):
     t2 = Tuner(golden_objective, golden_space(),
                TunerConfig(algorithm="random", budget=16, seed=2,
                            verbose=False, parallelism=4,
-                           checkpoint_path=str(ck)))
+                           loop="batch", checkpoint_path=str(ck)))
     h2 = t2.run()
     t2.close()
     assert len(h2) == 16
@@ -276,12 +277,15 @@ def test_mid_batch_checkpoint_resume(tmp_path):
 def test_nms_resume_with_speculative_batches_matches_uninterrupted():
     """Replaying a checkpoint must not feed unconsumed speculative probes
     into the NMS state machine: a resumed run continues exactly like an
-    uninterrupted one (NMS only draws rng at init, so traces are equal)."""
+    uninterrupted one (NMS only draws rng at init, so traces are equal).
+    Pinned to the batch loop, whose submission-order tells make the full
+    trace deterministic at parallelism=4; async-loop NMS reconciliation
+    is covered in test_async_loop.py."""
     def run_to(budget, ck=None):
         t = Tuner(golden_objective, golden_space(),
                   TunerConfig(algorithm="nms", budget=budget, seed=1,
                               verbose=False, parallelism=4,
-                              checkpoint_path=ck))
+                              loop="batch", checkpoint_path=ck))
         h = t.run()
         t.close()
         return h

@@ -7,7 +7,7 @@ import numpy as np
 from repro.configs import get_config
 from repro.models import CPU_TEST, build_model
 from repro.models.params import split_params
-from repro.serve.serve_step import generate, make_decode_step, make_prefill_step
+from repro.serve.serve_step import generate
 
 pytestmark = pytest.mark.slow  # real generate/decode loops
 

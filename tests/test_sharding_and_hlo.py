@@ -1,10 +1,8 @@
 """Sharding rules + HLO analysis units, and a subprocess mini dry-run."""
-import json
 import os
 import subprocess
 import sys
 
-import numpy as np
 import pytest
 
 from repro.tuning.hlo_analysis import (
@@ -55,7 +53,7 @@ def test_sharding_rules_divisibility():
 
     if len(jax.devices()) < 1:
         pytest.skip("no devices")
-    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    jax.make_mesh((1, 1), ("data", "model"))
 
     class FakeMesh:
         shape = {"data": 16, "model": 16}

@@ -1,5 +1,4 @@
 """Optimizer, data pipeline, checkpointing, serving, fault tolerance."""
-import math
 
 import jax
 import jax.numpy as jnp

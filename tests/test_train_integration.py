@@ -7,7 +7,7 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.data.pipeline import DataConfig
-from repro.models import CPU_TEST, build_model
+from repro.models import build_model
 from repro.models.params import split_params
 from repro.models.runtime import Runtime
 from repro.optim.optimizer import OptimizerConfig, adamw_init
