@@ -5,7 +5,7 @@ mesh (each evaluation lowers + compiles the cell).
     PYTHONPATH=src python examples/tune_backend.py \
         [--arch qwen3-moe-30b-a3b] [--shape train_4k] [--budget 12] \
         [--parallelism 4] [--wall-clock 600] [--loop async|batch] \
-        [--memo-cache artifacts/memo_cache.json]
+        [--memo-cache artifacts/memo_cache.json] [--cost-aware]
 
 How it runs (completion-driven ask/tell):
 
@@ -53,6 +53,9 @@ def main():
     ap.add_argument("--memo-cache", default="artifacts/memo_cache.json",
                     help="disk-backed memo of evaluated points; a second "
                          "run of the same job re-evaluates nothing")
+    ap.add_argument("--cost-aware", action="store_true",
+                    help="BO: EI-per-second acquisition (prefer cheap "
+                         "compiles, sharpening as --wall-clock runs out)")
     args = ap.parse_args()
     argv = [
         "--arch", args.arch, "--shape", args.shape, "--algo", args.algo,
@@ -64,6 +67,8 @@ def main():
     ]
     if args.wall_clock is not None:
         argv += ["--wall-clock", str(args.wall_clock)]
+    if args.cost_aware:
+        argv += ["--cost-aware"]
     tune_main(argv)
 
 

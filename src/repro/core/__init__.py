@@ -10,7 +10,15 @@ the parallel evaluation executor (``repro.tuning.executor``) under an
 iteration budget, a wall-clock budget, or both — with an optional
 disk-backed memo cache so repeated runs re-evaluate nothing.
 ``parallelism=1`` reproduces the paper's sequential
-one-point-per-iteration harness bit-for-bit."""
+one-point-per-iteration harness bit-for-bit.
+
+BO runs a compile-once GP surrogate (``repro.core.gp``): bucketed/padded
+jit shapes with validity masks, warm-started hyperparameter refits, and
+a fused jitted acquisition — per-completion suggestion refresh costs
+milliseconds, never an XLA recompile.  ``TunerConfig(cost_aware=True)``
+switches BO to EI-per-second, trading improvement against a
+per-candidate predicted measurement cost and sharpening the preference
+for cheap probes as ``wall_clock_budget`` nears exhaustion."""
 from repro.core.bayesopt import BayesOpt
 from repro.core.engine import Engine
 from repro.core.exhaustive import Exhaustive

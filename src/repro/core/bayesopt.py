@@ -18,21 +18,48 @@ by acquisition value (deduplicated, unseen), so a parallel executor can
 measure a whole acquisition batch per GP fit; ``ask(1, ...)`` selects
 exactly the argmax the single-point path always did.
 
-Under the completion-driven tuner loop, each completed measurement is
-told back immediately and the freed worker's replacement point comes
-from a *fresh* ``ask`` — i.e. the candidate set and surrogate refresh in
-completion order, so every suggestion conditions on all measurements
-finished so far (in-flight points are excluded via ``history.pending``).
-Measured ``cost_seconds`` accumulate on the engine
-(``mean_cost_seconds``) as the hook for cost-aware acquisition.
+Compile-once suggestion path
+----------------------------
+
+Under the completion-driven tuner loop every completed measurement
+triggers a fresh ``ask``, so suggestion cost is on the critical path.
+Three mechanisms keep it at microseconds of XLA instead of a fresh
+compile (see ``gp.py`` for the shape discipline):
+
+* the GP is **persistent** across asks and refits are **warm-started**
+  from the previous hyperparameters (short refinement schedule) once the
+  training set reaches ``warm_start_min_n`` rows — below that a cold fit
+  is a few jitted milliseconds, the posterior is still moving fast
+  enough that stale hyperparameters hurt, and the sequential suggestion
+  trace stays bit-for-bit identical to the pre-compile-once engine
+  (pinned by ``tests/golden/ask_tell_traces.json``); above it each Adam
+  step pays a full Cholesky, which is exactly where 30 warm steps beat
+  120 cold ones;
+* training and candidate arrays are padded to power-of-two buckets, so
+  history growth within a bucket reuses compiled executables;
+* acquisition scoring + ranking runs as one fused jitted call
+  (``GaussianProcess.acquisition_rank``) — the posterior never
+  round-trips to host.  ``jit_acquisition=False`` selects the vectorized
+  numpy scoring path instead (same ranking, no fusion).
+
+Cost-aware acquisition (``cost_aware=True``) divides the positive
+acquisition mass by a per-candidate predicted measurement cost from a
+second GP fit on log ``cost_seconds`` (EI-per-second, Snoek et al.,
+2012).  When the tuner reports wall-clock budget pressure via
+``note_budget``, the weighting ramps in as the deadline approaches, so
+the engine prefers cheap probes exactly when the remaining budget can
+only afford them.  Per-ask suggestion latency and jit-cache growth are
+recorded on ``ask_seconds`` / ``jit_misses`` for the bench gate.
 """
 from __future__ import annotations
 
 import math
-from typing import Dict, List
+import time
+from typing import Dict, List, Optional
 
 import numpy as np
 
+from repro.core import gp as gp_module
 from repro.core.engine import Engine
 from repro.core.gp import GaussianProcess
 from repro.core.history import History
@@ -40,9 +67,21 @@ from repro.core.space import SearchSpace
 
 _SQRT2 = math.sqrt(2.0)
 
+try:  # scipy ships with jax; erf over arrays without a Python loop
+    from scipy.special import erf as _erf
+except ImportError:  # pragma: no cover - scipy-less fallback
+    def _erf(z):
+        # Abramowitz & Stegun 7.1.26 — vectorized, |err| < 1.5e-7
+        z = np.asarray(z, np.float64)
+        sign = np.sign(z)
+        t = 1.0 / (1.0 + 0.3275911 * np.abs(z))
+        poly = t * (0.254829592 + t * (-0.284496736 + t * (
+            1.421413741 + t * (-1.453152027 + t * 1.061405429))))
+        return sign * (1.0 - poly * np.exp(-z * z))
+
 
 def _norm_cdf(z):
-    return 0.5 * (1.0 + np.vectorize(math.erf)(z / _SQRT2))
+    return 0.5 * (1.0 + _erf(np.asarray(z) / _SQRT2))
 
 
 def _norm_pdf(z):
@@ -61,6 +100,10 @@ class BayesOpt(Engine):
         kappa: float = 2.0,
         max_candidates: int = 4096,
         kernel: str = "matern52",
+        cost_aware: bool = False,
+        jit_acquisition: bool = True,
+        warm_start: bool = True,
+        warm_start_min_n: int = 64,
     ):
         super().__init__(space, seed)
         self.n_init = min(n_init, max(2, space.grid_size() // 2))
@@ -68,14 +111,35 @@ class BayesOpt(Engine):
         self.kappa = kappa
         self.max_candidates = max_candidates
         self.kernel = kernel
+        self.cost_aware = cost_aware
+        self.jit_acquisition = jit_acquisition
+        self.warm_start = warm_start
+        self.warm_start_min_n = warm_start_min_n
         self._init_points = None
+        self._gp: Optional[GaussianProcess] = None
+        self._cost_gp: Optional[GaussianProcess] = None
+        self._grid_cache = None  # small grids: (points, encodings), immutable
+        # per-ask observability (consumed by benchmarks + the CI gate)
+        self.ask_seconds: List[float] = []
+        self.jit_misses: List[int] = []
 
     def _candidates(self, history: History):
+        """Return ``(cands, Xs)``: candidate points + their encodings.
+
+        Small grids are enumerated and encoded exactly once per engine
+        (the grid is immutable); each ask just slices out the unseen
+        rows, keeping host-side Python work off the per-completion
+        suggestion path.
+        """
         if self.space.grid_size() <= self.max_candidates:
-            cands = [p for p in self.space.enumerate() if not history.seen(p)]
-            if cands:
-                return cands
-            return list(self.space.enumerate())
+            if self._grid_cache is None:
+                pts = list(self.space.enumerate())
+                self._grid_cache = (pts, self.space.encode_many(pts))
+            pts, enc = self._grid_cache
+            idx = [i for i, p in enumerate(pts) if not history.seen(p)]
+            if not idx:
+                return pts, enc
+            return [pts[i] for i in idx], enc[idx]
         cands = self.space.sample(self.rng, self.max_candidates // 2)
         # local neighborhood of the incumbent (exploitation half)
         best = history.best().point
@@ -88,9 +152,103 @@ class BayesOpt(Engine):
             if k not in seen_keys and not history.seen(c):
                 seen_keys.add(k)
                 out.append(c)
-        return out or cands
+        out = out or cands
+        return out, self.space.encode_many(out)
+
+    # -- surrogate maintenance ------------------------------------------------
+    def _fit_surrogate(self, X: np.ndarray, y: np.ndarray) -> GaussianProcess:
+        """Refit the persistent GP, warm-starting from the previous fit.
+
+        Warm-start policy: cold refits below ``warm_start_min_n`` rows
+        (cheap under compile-once shapes, keeps the small-history
+        suggestion trace bit-for-bit stable), warm refinement above
+        (each Adam step pays a Cholesky there, so 30 warm steps beat
+        120 cold ones).
+        """
+        if self._gp is None:
+            self._gp = GaussianProcess(kind=self.kernel)
+        params0 = (self._gp.params
+                   if self.warm_start and X.shape[0] >= self.warm_start_min_n
+                   else None)
+        self._gp.fit(X, y, params0=params0)
+        return self._gp
+
+    def _fit_cost_model(self, X: np.ndarray,
+                        history: History) -> Optional[GaussianProcess]:
+        """GP over log measurement cost; None until >= 2 costs were paid."""
+        if not self.cost_aware:
+            return None
+        costs = history.costs()
+        paid = costs > 0
+        if paid.sum() < 2 or float(costs[paid].std()) == 0.0:
+            return None
+        filled = np.where(paid, costs, costs[paid].mean())
+        log_cost = np.log(np.maximum(filled, 1e-6))
+        if self._cost_gp is None:
+            self._cost_gp = GaussianProcess(kind=self.kernel)
+        # same warm-start policy as the value GP: cold while small (the
+        # cost posterior is still moving fast), warm refinement above
+        params0 = (self._cost_gp.params
+                   if self.warm_start and X.shape[0] >= self.warm_start_min_n
+                   else None)
+        self._cost_gp.fit(X, log_cost, params0=params0)
+        return self._cost_gp
+
+    def _cost_alpha(self) -> float:
+        """EI-per-second exponent: full strength without budget info, else
+        ramping 0 -> 1 as the wall-clock budget nears exhaustion."""
+        frac = self.budget_fraction_remaining
+        if frac is None:
+            return 1.0
+        return float(np.clip(1.0 - frac, 0.0, 1.0))
+
+    # -- acquisition scoring --------------------------------------------------
+    def _rank_numpy(self, gp: GaussianProcess, Xs: np.ndarray, y_best: float,
+                    cost_gp: Optional[GaussianProcess]) -> np.ndarray:
+        """Vectorized numpy scoring fallback (no host/device fusion)."""
+        post = gp.posterior(Xs)
+        if self.acquisition == "ucb":
+            acq = post.mu + self.kappa * post.sigma
+        elif self.acquisition == "ei":
+            z = (post.mu - y_best) / np.maximum(post.sigma, 1e-12)
+            acq = (post.mu - y_best) * _norm_cdf(z) + post.sigma * _norm_pdf(z)
+        elif self.acquisition == "smsego":
+            # single-objective SMSego gain: how far the optimistic estimate
+            # extends the best observation (epsilon-dominance guard keeps
+            # pure-exploitation candidates from pinning the search)
+            optimistic = post.mu + self.kappa * post.sigma
+            eps = 1e-3 * max(abs(y_best), 1.0)
+            gain = optimistic - (y_best + eps)
+            acq = np.where(gain > 0, gain, gain * 1e-3)  # soft penalty below best
+        else:
+            raise ValueError(self.acquisition)
+        if cost_gp is not None:
+            rel = (np.exp(cost_gp.posterior(Xs).mu)
+                   / max(self.mean_cost_seconds, 1e-9))
+            rel = np.clip(rel, 1e-2, 1e2) ** self._cost_alpha()
+            acq = np.where(acq > 0, acq / rel, acq * rel)
+        return np.argsort(-acq, kind="stable")
+
+    def _rank(self, gp: GaussianProcess, Xs: np.ndarray, y_best: float,
+              cost_gp: Optional[GaussianProcess]) -> np.ndarray:
+        if not self.jit_acquisition:
+            return self._rank_numpy(gp, Xs, y_best, cost_gp)
+        order, _ = gp.acquisition_rank(
+            Xs, self.acquisition, y_best, kappa=self.kappa,
+            cost_gp=cost_gp, cost_alpha=self._cost_alpha(),
+            mean_cost=self.mean_cost_seconds)
+        return order
 
     def ask(self, n: int, history: History) -> List[Dict]:
+        t0 = time.perf_counter()
+        entries0 = gp_module.jit_cache_entries()
+        try:
+            return self._ask(n, history)
+        finally:
+            self.ask_seconds.append(time.perf_counter() - t0)
+            self.jit_misses.append(gp_module.jit_cache_entries() - entries0)
+
+    def _ask(self, n: int, history: History) -> List[Dict]:
         if self._init_points is None:
             self._init_points = self.space.sample_lhs(self.rng, self.n_init)
         batch: List[Dict] = []
@@ -118,30 +276,14 @@ class BayesOpt(Engine):
         # failed configs (OOM etc.) get the worst finite value (pessimism)
         y = np.where(finite, y, y[finite].min())
 
-        gp = GaussianProcess(kind=self.kernel).fit(X, y)
-        cands = self._candidates(history)
-        Xs = self.space.encode_many(cands)
-        post = gp.posterior(Xs)
+        gp = self._fit_surrogate(X, y)
+        cost_gp = self._fit_cost_model(X, history)
+        cands, Xs = self._candidates(history)
         y_best = float(np.max(y))
-
-        if self.acquisition == "ucb":
-            acq = post.mu + self.kappa * post.sigma
-        elif self.acquisition == "ei":
-            z = (post.mu - y_best) / np.maximum(post.sigma, 1e-12)
-            acq = (post.mu - y_best) * _norm_cdf(z) + post.sigma * _norm_pdf(z)
-        elif self.acquisition == "smsego":
-            # single-objective SMSego gain: how far the optimistic estimate
-            # extends the best observation (epsilon-dominance guard keeps
-            # pure-exploitation candidates from pinning the search)
-            optimistic = post.mu + self.kappa * post.sigma
-            eps = 1e-3 * max(abs(y_best), 1.0)
-            gain = optimistic - (y_best + eps)
-            acq = np.where(gain > 0, gain, gain * 1e-3)  # soft penalty below best
-        else:
-            raise ValueError(self.acquisition)
+        order = self._rank(gp, Xs, y_best, cost_gp)
 
         # top-n by acquisition; stable sort so n=1 picks np.argmax's candidate
-        for i in np.argsort(-acq, kind="stable"):
+        for i in order:
             if len(batch) == n:
                 break
             c = cands[int(i)]

@@ -47,6 +47,10 @@ class Engine:
         self.space = space
         self.rng = np.random.default_rng(seed)
         self._cost_log: List[float] = []  # measured seconds per told result
+        #: fraction of the wall-clock budget still left (None = no budget);
+        #: updated by the tuner via ``note_budget`` so cost-aware engines can
+        #: sharpen their cheap-probe preference as the deadline approaches
+        self.budget_fraction_remaining: Optional[float] = None
 
     # -- batched contract -----------------------------------------------------
     def ask(self, n: int, history: History) -> List[Dict]:
@@ -72,6 +76,15 @@ class Engine:
         """Mean measured evaluation cost — the wall-clock-awareness hook."""
         paid = [c for c in self._cost_log if c > 0]
         return sum(paid) / len(paid) if paid else 0.0
+
+    def note_budget(self, fraction_remaining: Optional[float]) -> None:
+        """Tuner hook: report how much of the wall-clock budget is left.
+
+        ``None`` clears budget pressure (no wall-clock budget configured).
+        Engines are free to ignore this; BayesOpt's cost-aware acquisition
+        uses it to ramp EI-per-second weighting in near the deadline.
+        """
+        self.budget_fraction_remaining = fraction_remaining
 
     # -- single-point compatibility shims ------------------------------------
     def suggest(self, history: History) -> Dict:

@@ -1,21 +1,77 @@
-"""Gaussian-process surrogate (paper §2.2) — pure JAX.
+"""Gaussian-process surrogate (paper §2.2) — pure JAX, compile-once.
 
 ARD RBF / Matérn-5/2 kernels; hyperparameters (log-lengthscales, log
 signal variance, log noise) fit by maximizing the log marginal likelihood
 with Adam on ``jax.grad`` (the GP itself is white-box — the *objective* is
 the black box).  Cholesky-based posterior, y standardized internally.
+
+Compile-once shape discipline
+-----------------------------
+
+Under the completion-driven tuner loop the training set grows by one row
+per completed measurement, and a naive jit over ``(n, d)`` arrays pays a
+fresh XLA compile for every new ``n`` (~0.5–1 s per ask — the ROADMAP
+"BO suggestion overhead" item).  Instead, every array entering a jitted
+function here is padded to a power-of-two **bucket** (minimum
+:data:`MIN_BUCKET`) with an explicit validity mask threaded through
+``_neg_mll`` / ``_fit`` / ``_posterior``:
+
+* live rows come first (the mask is a prefix mask), padded rows carry
+  zeros;
+* the masked Gram matrix gives padded rows a unit diagonal and zero
+  cross-covariance, so the Cholesky factor is block-diagonal — the live
+  block is *exactly* the unpadded factor — and the MLL restricted to the
+  live prefix is exact (padded rows contribute ``log 1 = 0`` and
+  ``alpha = 0``);
+* the candidate axis of the posterior/acquisition is bucketed the same
+  way, with padded candidates pinned to ``-inf`` acquisition.
+
+The jit cache therefore holds O(log n) entries per kernel kind instead
+of O(n): once the bucket schedule is warm, history growth within a
+bucket triggers **zero** new compiles (see :func:`jit_cache_entries`,
+asserted by tests and the ``bench-smoke`` CI gate).
+
+Warm starts: ``fit(X, y, params0=...)`` resumes Adam from a previous
+fit's hyperparameters and runs the short ``warm_steps`` schedule (120
+cold / 30 warm by default), so the per-completion refit costs a few
+dozen cheap jitted steps instead of a full cold optimization.
+
+``acquisition_rank`` fuses posterior + acquisition (EI / UCB / SMSego,
+optionally cost-aware EI-per-second against a second cost GP) + ranking
+into a single jitted call that returns sorted candidate indices — the
+(n, m) covariance never round-trips to host.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
 from functools import partial
-from typing import Dict
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 _JITTER = 1e-5
+
+#: smallest padded training-set / candidate-set size; buckets are
+#: MIN_BUCKET * 2**k, so the jit cache stays O(log n)
+MIN_BUCKET = 8
+
+
+def bucket_size(n: int, minimum: int = MIN_BUCKET) -> int:
+    """Smallest power-of-two bucket (>= ``minimum``) holding ``n`` rows."""
+    b = int(minimum)
+    while b < n:
+        b *= 2
+    return b
+
+
+def _pad_rows(a: np.ndarray, b: int) -> np.ndarray:
+    """Zero-pad the leading axis of ``a`` to ``b`` rows (prefix-live)."""
+    if a.shape[0] == b:
+        return a
+    pad = [(0, b - a.shape[0])] + [(0, 0)] * (a.ndim - 1)
+    return np.pad(a, pad)
 
 
 def _sqdist(X1: jnp.ndarray, X2: jnp.ndarray, ls: jnp.ndarray) -> jnp.ndarray:
@@ -39,30 +95,47 @@ def kernel_fn(kind: str, X1, X2, ls, sigma2):
     raise ValueError(kind)
 
 
-@partial(jax.jit, static_argnames=("kind",))
-def _neg_mll(params: Dict, X, y, kind: str):
+def _masked_gram(kind: str, X, mask, ls, sigma2, noise):
+    """Gram matrix exact on the live prefix, identity on padded rows.
+
+    Padded rows get a unit diagonal and zero cross-covariance, so the
+    Cholesky factor is block-diagonal with the live block identical to
+    the unpadded factor.
+    """
+    K = kernel_fn(kind, X, X, ls, sigma2)
+    m2 = mask[:, None] * mask[None, :]
+    return K * m2 + jnp.diag(noise * mask + (1.0 - mask))
+
+
+def _chol_alpha(params: Dict, X, y, mask, kind: str):
     ls = jnp.exp(params["log_ls"])
     sigma2 = jnp.exp(params["log_sigma2"])
     noise = jnp.exp(params["log_noise"]) + _JITTER
-    n = X.shape[0]
-    K = kernel_fn(kind, X, X, ls, sigma2) + noise * jnp.eye(n)
+    K = _masked_gram(kind, X, mask, ls, sigma2, noise)
     Lc = jnp.linalg.cholesky(K)
-    alpha = jax.scipy.linalg.cho_solve((Lc, True), y)
+    alpha = jax.scipy.linalg.cho_solve((Lc, True), y * mask)
+    return Lc, alpha, ls, sigma2
+
+
+@partial(jax.jit, static_argnames=("kind",))
+def _neg_mll(params: Dict, X, y, mask, kind: str):
+    n = jnp.sum(mask)
+    Lc, alpha, _, _ = _chol_alpha(params, X, y, mask, kind)
     mll = (
-        -0.5 * y @ alpha
-        - jnp.sum(jnp.log(jnp.diagonal(Lc)))
+        -0.5 * (y * mask) @ alpha
+        - jnp.sum(mask * jnp.log(jnp.diagonal(Lc)))
         - 0.5 * n * jnp.log(2 * jnp.pi)
     )
     return -mll
 
 
 @partial(jax.jit, static_argnames=("kind", "steps"))
-def _fit(params0: Dict, X, y, kind: str, steps: int, lr: float):
+def _fit(params0: Dict, X, y, mask, kind: str, steps: int, lr: float):
     grad = jax.grad(_neg_mll)
 
     def body(carry, _):
         params, m, v, t = carry
-        g = grad(params, X, y, kind)
+        g = grad(params, X, y, mask, kind)
         t = t + 1
         m = jax.tree_util.tree_map(lambda m_, g_: 0.9 * m_ + 0.1 * g_, m, g)
         v = jax.tree_util.tree_map(lambda v_, g_: 0.999 * v_ + 0.001 * g_ * g_, v, g)
@@ -86,20 +159,77 @@ def _fit(params0: Dict, X, y, kind: str, steps: int, lr: float):
     return params
 
 
-@partial(jax.jit, static_argnames=("kind",))
-def _posterior(params: Dict, X, y, Xs, kind: str):
-    ls = jnp.exp(params["log_ls"])
-    sigma2 = jnp.exp(params["log_sigma2"])
-    noise = jnp.exp(params["log_noise"]) + _JITTER
-    n = X.shape[0]
-    K = kernel_fn(kind, X, X, ls, sigma2) + noise * jnp.eye(n)
-    Lc = jnp.linalg.cholesky(K)
-    Ks = kernel_fn(kind, X, Xs, ls, sigma2)  # (n, m)
-    alpha = jax.scipy.linalg.cho_solve((Lc, True), y)
+def _posterior_core(params: Dict, X, y, mask, Xs, kind: str):
+    """Masked posterior on padded shapes; exact on the live prefix."""
+    Lc, alpha, ls, sigma2 = _chol_alpha(params, X, y, mask, kind)
+    Ks = kernel_fn(kind, X, Xs, ls, sigma2) * mask[:, None]  # (n, m)
     mu = Ks.T @ alpha
     v = jax.scipy.linalg.solve_triangular(Lc, Ks, lower=True)
     var = sigma2 - jnp.sum(v * v, axis=0)
     return mu, jnp.clip(var, 1e-12)
+
+
+_posterior = jax.jit(_posterior_core, static_argnames=("kind",))
+
+
+@partial(jax.jit, static_argnames=("kind", "acquisition", "cost_aware"))
+def _acq_rank(params: Dict, X, y, mask, Xs, cand_mask,
+              y_mean, y_std, y_best, kappa, eps,
+              cost_params: Dict, cost_y, cost_mean, cost_std,
+              cost_alpha, mean_cost,
+              kind: str, acquisition: str, cost_aware: bool):
+    """Fused posterior + acquisition + ranking on padded shapes.
+
+    Returns ``(order, acq)``: candidate indices sorted by descending
+    acquisition (stable, padded candidates last at ``-inf``) and the raw
+    de-standardized acquisition values.  The (n, m) cross-covariance and
+    the triangular solves stay on device.
+    """
+    mu_s, var_s = _posterior_core(params, X, y, mask, Xs, kind)
+    mu = mu_s * y_std + y_mean
+    sigma = jnp.sqrt(var_s) * y_std
+    if acquisition == "ucb":
+        acq = mu + kappa * sigma
+    elif acquisition == "ei":
+        z = (mu - y_best) / jnp.maximum(sigma, 1e-12)
+        cdf = 0.5 * (1.0 + jax.scipy.special.erf(z / jnp.sqrt(2.0)))
+        pdf = jnp.exp(-0.5 * z * z) / jnp.sqrt(2 * jnp.pi)
+        acq = (mu - y_best) * cdf + sigma * pdf
+    elif acquisition == "smsego":
+        # single-objective SMSego gain: how far the optimistic estimate
+        # extends the best observation (epsilon-dominance guard keeps
+        # pure-exploitation candidates from pinning the search)
+        optimistic = mu + kappa * sigma
+        gain = optimistic - (y_best + eps)
+        acq = jnp.where(gain > 0, gain, gain * 1e-3)  # soft penalty below best
+    else:
+        raise ValueError(acquisition)
+    if cost_aware:
+        # EI-per-second (Snoek et al., 2012): divide the positive
+        # acquisition mass by the predicted measurement cost, relative to
+        # the mean observed cost so the units cancel; ``cost_alpha`` in
+        # [0, 1] ramps the trade-off in as the wall clock runs out.
+        cmu_s, _ = _posterior_core(cost_params, X, cost_y, mask, Xs, kind)
+        log_cost = cmu_s * cost_std + cost_mean
+        rel = jnp.exp(log_cost) / jnp.maximum(mean_cost, 1e-9)
+        rel = jnp.clip(rel, 1e-2, 1e2) ** cost_alpha
+        acq = jnp.where(acq > 0, acq / rel, acq * rel)
+    ranked = jnp.where(cand_mask > 0, acq, -jnp.inf)
+    order = jnp.argsort(-ranked, stable=True)
+    return order, acq
+
+
+def jit_cache_entries() -> int:
+    """Total compiled-variant count across this module's jitted functions.
+
+    The compile-once contract (and the ``bench-smoke`` CI gate) is that
+    this number stays flat once the bucket schedule is warm: history
+    growth within a bucket must not add entries.
+    """
+    # _cache_size is a private jax API; degrade to 0 (observability only)
+    # rather than breaking the ask() path if a future jax drops it
+    return sum(getattr(f, "_cache_size", lambda: 0)()
+               for f in (_neg_mll, _fit, _posterior, _acq_rank))
 
 
 @dataclass
@@ -109,61 +239,154 @@ class GPResult:
 
 
 class GaussianProcess:
-    """Fit on (X in [0,1]^d, y); query posterior at candidate points."""
+    """Fit on (X in [0,1]^d, y); query posterior at candidate points.
 
-    def __init__(self, kind: str = "matern52", fit_steps: int = 120, lr: float = 0.05):
+    All device computation runs on bucketed/padded shapes (see module
+    docstring), so repeated fits on a growing training set reuse the
+    compiled executables.  ``fit(..., params0=prev.params)`` warm-starts
+    the hyperparameter optimization with the short ``warm_steps``
+    schedule.
+    """
+
+    def __init__(self, kind: str = "matern52", fit_steps: int = 120,
+                 warm_steps: int = 30, lr: float = 0.05,
+                 min_bucket: int = MIN_BUCKET):
         self.kind = kind
         self.fit_steps = fit_steps
+        self.warm_steps = warm_steps
         self.lr = lr
+        self.min_bucket = min_bucket
         self._params = None
-        self._X = None
-        self._y = None
+        self._X = None       # padded (B, d)
+        self._y = None       # padded (B,), standardized
+        self._mask = None    # (B,) float prefix mask
         self._y_mean = 0.0
         self._y_std = 1.0
+        #: observability: did the most recent fit() warm-start from params0?
+        self.last_fit_was_warm = False
 
-    def fit(self, X: np.ndarray, y: np.ndarray) -> "GaussianProcess":
-        X = jnp.asarray(X, jnp.float64 if jax.config.jax_enable_x64 else jnp.float32)
+    @property
+    def params(self) -> Optional[Dict]:
+        """Fitted hyperparameters (warm-start handle for the next fit)."""
+        return self._params
+
+    def _padded(self, X: np.ndarray, y: np.ndarray, dtype):
+        n = X.shape[0]
+        b = bucket_size(n, self.min_bucket)
+        Xp = jnp.asarray(_pad_rows(np.asarray(X, np.float64), b), dtype)
+        yp = jnp.asarray(_pad_rows(np.asarray(y, np.float64), b), dtype)
+        mask = jnp.asarray((np.arange(b) < n).astype(np.float64), dtype)
+        return Xp, yp, mask
+
+    def fit(self, X: np.ndarray, y: np.ndarray,
+            params0: Optional[Dict] = None) -> "GaussianProcess":
+        dtype = jnp.float64 if jax.config.jax_enable_x64 else jnp.float32
         yn = np.asarray(y, np.float64)
         self._y_mean = float(yn.mean())
         self._y_std = float(yn.std() + 1e-9)
-        y_std = jnp.asarray((yn - self._y_mean) / self._y_std, X.dtype)
-        d = X.shape[1]
-        params0 = {
-            "log_ls": jnp.full((d,), np.log(0.3), X.dtype),
-            "log_sigma2": jnp.asarray(0.0, X.dtype),
-            "log_noise": jnp.asarray(np.log(1e-3), X.dtype),
+        y_std = (yn - self._y_mean) / self._y_std
+        Xp, yp, mask = self._padded(np.asarray(X), y_std, dtype)
+        d = Xp.shape[1]
+        cold = {
+            "log_ls": jnp.full((d,), np.log(0.3), dtype),
+            "log_sigma2": jnp.asarray(0.0, dtype),
+            "log_noise": jnp.asarray(np.log(1e-3), dtype),
         }
-        fitted = _fit(params0, X, y_std, self.kind, self.fit_steps, self.lr)
+        warm = params0 is not None
+        self.last_fit_was_warm = warm
+        init = params0 if warm else cold
+        steps = self.warm_steps if warm else self.fit_steps
+        fitted = _fit(init, Xp, yp, mask, self.kind, steps, self.lr)
         # fp32 robustness: if the fitted hyperparameters make the Cholesky
         # blow up (near-singular K), fall back to safe defaults with a
-        # larger noise floor.
-        nll = _neg_mll(fitted, X, y_std, self.kind)
+        # larger noise floor; a diverged warm start additionally gets a
+        # full cold refit before giving up.
+        nll = _neg_mll(fitted, Xp, yp, mask, self.kind)
         if not bool(jnp.isfinite(nll)):
-            fitted = {
-                "log_ls": jnp.full_like(params0["log_ls"], np.log(0.3)),
-                "log_sigma2": jnp.zeros_like(params0["log_sigma2"]),
-                "log_noise": jnp.full_like(params0["log_noise"], np.log(1e-2)),
-            }
+            if warm:
+                fitted = _fit(cold, Xp, yp, mask, self.kind,
+                              self.fit_steps, self.lr)
+                nll = _neg_mll(fitted, Xp, yp, mask, self.kind)
+            if not bool(jnp.isfinite(nll)):
+                fitted = {
+                    "log_ls": jnp.full_like(cold["log_ls"], np.log(0.3)),
+                    "log_sigma2": jnp.zeros_like(cold["log_sigma2"]),
+                    "log_noise": jnp.full_like(cold["log_noise"], np.log(1e-2)),
+                }
         self._params = fitted
-        self._X, self._y = X, y_std
+        self._X, self._y, self._mask = Xp, yp, mask
         return self
+
+    def _padded_candidates(self, Xs: np.ndarray):
+        m = Xs.shape[0]
+        b = bucket_size(m, self.min_bucket)
+        Xsp = jnp.asarray(_pad_rows(np.asarray(Xs, np.float64), b),
+                          self._X.dtype)
+        cmask = jnp.asarray((np.arange(b) < m).astype(np.float64),
+                            self._X.dtype)
+        return Xsp, cmask, m
 
     def posterior(self, Xs: np.ndarray) -> GPResult:
         assert self._params is not None, "fit first"
-        mu, var = _posterior(
-            self._params, self._X, self._y, jnp.asarray(Xs, self._X.dtype), self.kind
-        )
-        mu, var = np.asarray(mu), np.asarray(var)
+        Xsp, _, m = self._padded_candidates(Xs)
+        mu, var = _posterior(self._params, self._X, self._y, self._mask,
+                             Xsp, self.kind)
+        mu, var = np.asarray(mu)[:m], np.asarray(var)[:m]
         if not np.isfinite(mu).all():  # last-resort refit with big noise
             safe = dict(self._params)
             safe["log_noise"] = jnp.full_like(self._params["log_noise"],
                                               np.log(1e-1))
-            mu, var = _posterior(safe, self._X, self._y,
-                                 jnp.asarray(Xs, self._X.dtype), self.kind)
-            mu, var = np.asarray(mu), np.asarray(var)
+            mu, var = _posterior(safe, self._X, self._y, self._mask,
+                                 Xsp, self.kind)
+            mu, var = np.asarray(mu)[:m], np.asarray(var)[:m]
         mu = np.nan_to_num(mu, nan=0.0) * self._y_std + self._y_mean
         sigma = np.sqrt(np.clip(np.nan_to_num(var, nan=1.0), 1e-12, None)) * self._y_std
         return GPResult(mu, sigma)
+
+    def acquisition_rank(self, Xs: np.ndarray, acquisition: str,
+                         y_best: float, kappa: float = 2.0,
+                         cost_gp: Optional["GaussianProcess"] = None,
+                         cost_alpha: float = 1.0,
+                         mean_cost: float = 0.0) -> Tuple[np.ndarray, np.ndarray]:
+        """Rank candidates by acquisition in one fused jitted call.
+
+        Returns ``(order, acq)`` restricted to the live candidates:
+        ``order`` walks indices of ``Xs`` by descending acquisition.
+        ``cost_gp`` (a GP fit on log measurement cost over the same
+        training inputs) switches on EI-per-second weighting.
+        """
+        assert self._params is not None, "fit first"
+        Xsp, cmask, m = self._padded_candidates(Xs)
+        eps = 1e-3 * max(abs(y_best), 1.0)
+        cost_aware = cost_gp is not None
+        if cost_aware:
+            assert cost_gp._y.shape == self._y.shape, \
+                "cost GP must be fit on the same (padded) training inputs"
+            cparams, cy = cost_gp._params, cost_gp._y
+            cmean, cstd = cost_gp._y_mean, cost_gp._y_std
+        else:  # same-shape dummies keep the traced signature stable
+            cparams, cy = self._params, self._y
+            cmean, cstd = 0.0, 1.0
+        dt = self._X.dtype
+
+        def rank(params):
+            order, acq = _acq_rank(
+                params, self._X, self._y, self._mask, Xsp, cmask,
+                jnp.asarray(self._y_mean, dt), jnp.asarray(self._y_std, dt),
+                jnp.asarray(y_best, dt), jnp.asarray(kappa, dt),
+                jnp.asarray(eps, dt),
+                cparams, cy, jnp.asarray(cmean, dt), jnp.asarray(cstd, dt),
+                jnp.asarray(cost_alpha, dt), jnp.asarray(mean_cost, dt),
+                self.kind, acquisition, cost_aware)
+            return np.asarray(order), np.asarray(acq)[:m]
+
+        order, acq = rank(self._params)
+        if not np.isfinite(acq).all():  # same fp32 last resort as posterior():
+            safe = dict(self._params)   # re-rank with a big noise floor
+            safe["log_noise"] = jnp.full_like(self._params["log_noise"],
+                                              np.log(1e-1))
+            order, acq = rank(safe)
+        return order[order < m], acq
 
     @property
     def lengthscales(self) -> np.ndarray:

@@ -44,6 +44,13 @@ class History:
         self.evals: List[Evaluation] = []
         self._by_key: Dict[Tuple, Evaluation] = {}
         self._inflight: set = set()
+        # append-only caches behind encoded()/values()/costs(): the history
+        # only ever grows, so each ask encodes just the new rows instead of
+        # re-encoding the whole trace (O(n) per ask, not O(n^2) per run)
+        self._enc_X = np.zeros((0, space.n_dims))
+        self._enc_y = np.zeros((0,))
+        self._enc_costs = np.zeros((0,))
+        self._enc_n = 0
 
     def __len__(self) -> int:
         return len(self.evals)
@@ -109,13 +116,39 @@ class History:
     def points(self) -> List[Dict]:
         return [e.point for e in self.evals]
 
+    def _refresh_encoding_cache(self) -> None:
+        """Encode only rows appended since the last call (append-only)."""
+        n = len(self.evals)
+        if self._enc_n == n:
+            return
+        cap = self._enc_X.shape[0]
+        if cap < n:  # geometric growth: amortized O(1) appends
+            new_cap = max(2 * cap, n, 16)
+            self._enc_X = np.concatenate(
+                [self._enc_X, np.zeros((new_cap - cap, self.space.n_dims))])
+            self._enc_y = np.concatenate([self._enc_y, np.zeros(new_cap - cap)])
+            self._enc_costs = np.concatenate(
+                [self._enc_costs, np.zeros(new_cap - cap)])
+        for i in range(self._enc_n, n):
+            e = self.evals[i]
+            self._enc_X[i] = self.space.encode(e.point)
+            self._enc_y[i] = e.value
+            self._enc_costs[i] = e.cost_seconds
+        self._enc_n = n
+
     def values(self) -> np.ndarray:
-        return np.array([e.value for e in self.evals])
+        self._refresh_encoding_cache()
+        return self._enc_y[:len(self.evals)].copy()
+
+    def costs(self) -> np.ndarray:
+        """Measured ``cost_seconds`` per evaluation (0 where unmeasured)."""
+        self._refresh_encoding_cache()
+        return self._enc_costs[:len(self.evals)].copy()
 
     def encoded(self) -> Tuple[np.ndarray, np.ndarray]:
-        X = self.space.encode_many(self.points())
-        y = self.values()
-        return X, y
+        self._refresh_encoding_cache()
+        n = len(self.evals)
+        return self._enc_X[:n].copy(), self._enc_y[:n].copy()
 
     # -- Table 2 analysis ----------------------------------------------------
     def sampled_ranges(self) -> Dict[str, Tuple]:

@@ -87,6 +87,8 @@ class TunerConfig:
     # abandoned at the deadline (forces a pool backend unless overridden)
     loop: str = "async"  # async (completion-driven) | batch (legacy barrier)
     memo_cache_path: Optional[str] = None  # disk-backed cross-run memo cache
+    cost_aware: bool = False  # BO: EI-per-second acquisition (prefer cheap
+    # probes, ramping in as wall_clock_budget nears exhaustion)
 
 
 class Tuner:
@@ -105,8 +107,15 @@ class Tuner:
             )
         if config.loop not in LOOPS:
             raise ValueError(f"unknown loop {config.loop!r}; one of {LOOPS}")
+        engine_kwargs = dict(config.engine_kwargs)
+        if config.cost_aware:
+            if config.algorithm != "bo":
+                raise ValueError(
+                    "cost_aware acquisition is a BayesOpt feature "
+                    f"(algorithm={config.algorithm!r})")
+            engine_kwargs.setdefault("cost_aware", True)
         self.engine: Engine = ENGINES[config.algorithm](
-            space, seed=config.seed, **config.engine_kwargs
+            space, seed=config.seed, **engine_kwargs
         )
         backend = config.executor_backend
         if backend is None and config.wall_clock_budget is not None:
@@ -192,6 +201,9 @@ class Tuner:
                            budget - len(self.history) - len(outstanding))
                 asked_any = False
                 if want > 0:
+                    if deadline is not None:  # budget pressure -> cost-aware BO
+                        self.engine.note_budget(
+                            max(0.0, (deadline - time.time()) / wall_clock))
                     points = self.engine.ask(want, self.history)
                     asked_any = bool(points)
                     submitted = []
@@ -258,6 +270,9 @@ class Tuner:
             if deadline is not None and time.time() >= deadline:
                 self._wall_clock_exhausted(wall_clock)
                 break
+            if deadline is not None:  # budget pressure -> cost-aware BO
+                self.engine.note_budget(
+                    max(0.0, (deadline - time.time()) / wall_clock))
             points = self.engine.ask(
                 min(batch_size, budget - len(self.history)), self.history)
             if not points:

@@ -27,6 +27,10 @@ between evaluations), and
 as a failure instead of stalling the run.  ``--memo-cache`` persists
 every measurement to a file-locked on-disk store, so repeated or resumed
 runs (and other hosts sharing the filesystem) re-evaluate nothing.
+``--cost-aware`` (BO) switches the acquisition to EI-per-second: a
+second GP predicts each candidate's measurement cost and the engine
+prefers cheap probes, ramping the preference in as ``--wall-clock``
+nears exhaustion.
 """
 import argparse
 import math
@@ -68,7 +72,14 @@ def main(argv=None):
     ap.add_argument("--memo-cache", default=None,
                     help="disk-backed memo cache of evaluated points "
                          "(atomic + file-locked; shared across runs/hosts)")
+    ap.add_argument("--cost-aware", action="store_true",
+                    help="BO only: EI-per-second acquisition — trade "
+                         "expected improvement against predicted measurement "
+                         "cost, preferring cheap probes as --wall-clock "
+                         "nears exhaustion")
     args = ap.parse_args(argv)
+    if args.cost_aware and args.algo != "bo":
+        ap.error("--cost-aware requires --algo bo")
 
     cfg = get_config(args.arch)
     shape_kind = "train" if args.shape.startswith("train") else "serve"
@@ -88,7 +99,8 @@ def main(argv=None):
                     eval_timeout=args.eval_timeout,
                     wall_clock_budget=args.wall_clock,
                     loop=args.loop,
-                    memo_cache_path=args.memo_cache),
+                    memo_cache_path=args.memo_cache,
+                    cost_aware=args.cost_aware),
     )
     history = tuner.run()
     tuner.close()

@@ -96,7 +96,17 @@ def run_objective(objective: Evaluator, point: Dict):
         meta = dict(meta)
     except Exception as e:
         value, meta = -math.inf, {"error": repr(e)}
-    return value, time.time() - t0, meta
+    seconds = time.time() - t0
+    # an evaluator that knows its own measurement cost (a harness timing
+    # just the compile, or a benchmark with simulated costs) declares it
+    # as meta["cost_seconds"], overriding the wall-clock default; this is
+    # the signal cost-aware acquisition trains its cost model on, so a
+    # declared cost keeps it deterministic under harness noise
+    declared = meta.get("cost_seconds")
+    if isinstance(declared, (int, float)) and not isinstance(declared, bool) \
+            and math.isfinite(declared) and declared >= 0:
+        seconds = float(declared)
+    return value, seconds, meta
 
 
 def _store_key(key) -> str:

@@ -7,6 +7,14 @@ case in tests and synthetic benchmarks) are adapted with
 ``FunctionEvaluator``; nothing downstream sniffs the return type with
 ``isinstance(value, tuple)`` any more.
 
+An evaluator that knows its own measurement cost may declare it as
+``meta["cost_seconds"]`` (a finite, non-negative number): the executor
+records it as the evaluation's ``cost_seconds`` instead of the measured
+wall-clock time.  This is the signal BO's cost-aware (EI-per-second)
+acquisition trains its cost model on — declare it when the harness can
+separate true measurement cost (the compile) from its own overhead, or
+when costs are simulated and should stay deterministic.
+
 This module is dependency-light on purpose: the executor and the core
 tuner import it without pulling in jax.
 """

@@ -356,3 +356,28 @@ def test_tuner_records_meta_from_evaluator():
                           verbose=False))
     h = t.run()
     assert all(e.meta["tag"] == e.point["inter_op"] for e in h.evals)
+
+
+def test_evaluator_declared_cost_overrides_wall_clock():
+    """meta["cost_seconds"] is recorded as the evaluation cost (the signal
+    cost-aware acquisition trains on), overriding the wall-clock timing;
+    bogus declarations fall back to the measured time."""
+    class Declared(Evaluator):
+        def __call__(self, p):
+            return 1.0, {"cost_seconds": 7.5}
+
+    ex = EvaluationExecutor(Declared(), golden_space(), parallelism=1)
+    out = ex.evaluate([{"inter_op": 1, "intra_op": 0, "build": 1}])
+    ex.close()
+    assert out[0].cost_seconds == 7.5
+    assert out[0].meta["cost_seconds"] == 7.5
+
+    class Bogus(Evaluator):
+        def __call__(self, p):
+            time.sleep(0.01)
+            return 1.0, {"cost_seconds": -3.0}
+
+    ex = EvaluationExecutor(Bogus(), golden_space(), parallelism=1)
+    out = ex.evaluate([{"inter_op": 1, "intra_op": 0, "build": 1}])
+    ex.close()
+    assert out[0].cost_seconds >= 0.01  # fell back to wall clock

@@ -1,0 +1,460 @@
+"""Compile-once GP surrogate: padded-vs-exact equivalence, warm-started
+refits, zero-recompile-within-bucket, fused jitted acquisition, and
+cost-aware EI-per-second.
+
+The compile-once contract (gp.py module docstring): every array entering
+a jitted function is padded to a power-of-two bucket with a validity
+mask, masked rows get a unit diagonal / zero cross-covariance so the
+Cholesky and MLL are *exact* on the live prefix, and history growth
+within a bucket must add zero jit-cache entries.
+"""
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    GaussianProcess,
+    History,
+    IntDim,
+    SearchSpace,
+    Tuner,
+    TunerConfig,
+)
+from repro.core import gp as gp_module
+from repro.core.bayesopt import BayesOpt, _norm_cdf
+from repro.core.gp import _neg_mll, _posterior, bucket_size
+
+
+def _toy_data(n=11, d=3, seed=0):
+    rng = np.random.default_rng(seed)
+    X = rng.random((n, d))
+    y = np.sin(3 * X[:, 0]) + X[:, 1] ** 2 - 0.5 * X[:, 2]
+    return X, y
+
+
+def _params(d, dtype=jnp.float32):
+    return {
+        "log_ls": jnp.full((d,), np.log(0.3), dtype),
+        "log_sigma2": jnp.asarray(0.2, dtype),
+        "log_noise": jnp.asarray(np.log(1e-3), dtype),
+    }
+
+
+def _pad(a, b):
+    pad = [(0, b - a.shape[0])] + [(0, 0)] * (a.ndim - 1)
+    return np.pad(np.asarray(a, np.float32), pad)
+
+
+# ---------------------------------------------------------------------------
+# padded-vs-exact equivalence of the masked kernels
+# ---------------------------------------------------------------------------
+
+def test_bucket_schedule():
+    assert [bucket_size(n) for n in (1, 8, 9, 16, 17, 100)] == \
+        [8, 8, 16, 16, 32, 128]
+    # O(log n) buckets: 1..1000 training-set sizes hit only 8 shapes
+    assert len({bucket_size(n) for n in range(1, 1001)}) == 8
+
+
+@pytest.mark.parametrize("kind", ["rbf", "matern52"])
+def test_padded_neg_mll_matches_exact(kind):
+    X, y = _toy_data()
+    n, d = X.shape
+    p = _params(d)
+    exact = _neg_mll(p, jnp.asarray(X, jnp.float32), jnp.asarray(y, jnp.float32),
+                     jnp.ones(n, jnp.float32), kind)
+    b = bucket_size(n)
+    assert b > n  # this case genuinely pads
+    mask = jnp.asarray((np.arange(b) < n).astype(np.float32))
+    padded = _neg_mll(p, jnp.asarray(_pad(X, b)), jnp.asarray(_pad(y, b)),
+                      mask, kind)
+    np.testing.assert_allclose(float(padded), float(exact), rtol=1e-5)
+
+
+@pytest.mark.parametrize("kind", ["rbf", "matern52"])
+def test_padded_posterior_matches_exact(kind):
+    X, y = _toy_data()
+    n, d = X.shape
+    Xs = np.random.default_rng(1).random((5, d))
+    p = _params(d)
+    mu_e, var_e = _posterior(p, jnp.asarray(X, jnp.float32),
+                             jnp.asarray(y, jnp.float32),
+                             jnp.ones(n, jnp.float32),
+                             jnp.asarray(Xs, jnp.float32), kind)
+    bn, bm = bucket_size(n), bucket_size(len(Xs))
+    mask = jnp.asarray((np.arange(bn) < n).astype(np.float32))
+    mu_p, var_p = _posterior(p, jnp.asarray(_pad(X, bn)),
+                             jnp.asarray(_pad(y, bn)), mask,
+                             jnp.asarray(_pad(Xs, bm)), kind)
+    np.testing.assert_allclose(np.asarray(mu_p)[:5], np.asarray(mu_e),
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(var_p)[:5], np.asarray(var_e),
+                               rtol=1e-4, atol=1e-6)
+
+
+def test_gp_end_to_end_padding_invariant():
+    """A GP padded to a big bucket predicts the same as a barely-padded
+    one: the fit trajectory and posterior only see the live prefix."""
+    X, y = _toy_data(n=13)
+    Xs = np.random.default_rng(2).random((7, X.shape[1]))
+    small = GaussianProcess(min_bucket=16).fit(X, y).posterior(Xs)
+    big = GaussianProcess(min_bucket=64).fit(X, y).posterior(Xs)
+    # fp32 reassociation across 120 Adam steps accumulates ~1e-3 relative
+    # drift between bucket sizes; the posteriors must still agree closely
+    np.testing.assert_allclose(small.mu, big.mu, rtol=1e-2, atol=5e-3)
+    np.testing.assert_allclose(small.sigma, big.sigma, rtol=5e-2, atol=5e-3)
+
+
+# ---------------------------------------------------------------------------
+# warm-started refits
+# ---------------------------------------------------------------------------
+
+def test_warm_started_refit_stays_finite_and_accurate():
+    X, y = _toy_data(n=24, seed=3)
+    gp = GaussianProcess()
+    gp.fit(X[:20], y[:20])
+    assert not gp.last_fit_was_warm
+    cold_params = gp.params
+    gp.fit(X, y, params0=cold_params)  # 4 new rows, short warm schedule
+    assert gp.last_fit_was_warm
+    for leaf in gp.params.values():
+        assert np.isfinite(np.asarray(leaf)).all()
+    post = gp.posterior(X)
+    assert np.isfinite(post.mu).all() and np.isfinite(post.sigma).all()
+    # warm refit stays near-interpolating like a cold fit does
+    assert np.sqrt(np.mean((post.mu - y) ** 2)) < 0.1
+
+
+def test_engine_warm_start_policy():
+    """Cold refits below warm_start_min_n (trace-pinned regime), warm
+    refinement above."""
+    space = SearchSpace([IntDim("x", 0, 63), IntDim("z", 0, 7)])
+
+    def drive(engine, n_iters):
+        h = History(space)
+        for _ in range(n_iters):
+            p = engine.ask(1, h)[0]
+            v = float(p["x"] * 0.1 - (p["z"] - 3) ** 2)
+            engine.tell([p], [v], [0.05])
+            h.add(p, v, 0.05)
+        return h
+
+    eng = BayesOpt(space, seed=0, warm_start_min_n=12)
+    drive(eng, 11)
+    assert not eng._gp.last_fit_was_warm  # 10 rows at the last fit: cold
+    drive_more = BayesOpt(space, seed=0, warm_start_min_n=12)
+    drive(drive_more, 16)
+    assert drive_more._gp.last_fit_was_warm  # >= 12 rows: warm refinement
+    off = BayesOpt(space, seed=0, warm_start=False, warm_start_min_n=12)
+    drive(off, 16)
+    assert not off._gp.last_fit_was_warm
+
+
+# ---------------------------------------------------------------------------
+# compile-once: zero recompiles while the history grows within a bucket
+# ---------------------------------------------------------------------------
+
+def test_zero_recompiles_within_bucket():
+    # grid of 341: the candidate set (341 - n unseen points) stays inside
+    # the 512 bucket for every n this test reaches, so the candidate axis
+    # never crosses a bucket boundary mid-test
+    space = SearchSpace([IntDim("x", 0, 30), IntDim("z", 0, 10)])
+    eng = BayesOpt(space, seed=0)
+    h = History(space)
+
+    def step():
+        p = eng.ask(1, h)[0]
+        v = float(-(p["x"] - 17) ** 2 - p["z"])
+        eng.tell([p], [v], [0.01])
+        h.add(p, v, 0.01)
+
+    # warm the bucket: cross into the 32-row training bucket (n=17)
+    while len(h) < 18:
+        step()
+    entries = gp_module.jit_cache_entries()
+    while len(h) < 30:  # 12 more asks, all inside the 32-row bucket
+        step()
+    assert gp_module.jit_cache_entries() == entries, \
+        "history growth within a bucket must not trigger XLA recompiles"
+    assert eng.jit_misses[18:] == [0] * (len(eng.jit_misses) - 18)
+    assert len(eng.ask_seconds) == len(eng.jit_misses) == 30
+
+
+# ---------------------------------------------------------------------------
+# fused jitted acquisition == vectorized numpy fallback
+# ---------------------------------------------------------------------------
+
+def _seeded_engine_pair(acquisition):
+    space = SearchSpace([IntDim("x", 0, 15), IntDim("z", 0, 12)])
+    jit_eng = BayesOpt(space, seed=7, acquisition=acquisition)
+    np_eng = BayesOpt(space, seed=7, acquisition=acquisition,
+                      jit_acquisition=False)
+    return space, jit_eng, np_eng
+
+
+@pytest.mark.parametrize("acquisition", ["smsego", "ucb"])
+def test_jit_and_numpy_acquisition_agree(acquisition):
+    """smsego/ucb are pure mul/add on the posterior, so the fused jitted
+    path and the numpy fallback produce the *same suggestion sequence*."""
+    space, jit_eng, np_eng = _seeded_engine_pair(acquisition)
+
+    def obj(p):
+        return float(np.exp(-((p["x"] - 9) / 4) ** 2) * 20 + 0.5 * p["z"])
+
+    h_j, h_n = History(space), History(space)
+    for _ in range(14):
+        pj = jit_eng.ask(1, h_j)[0]
+        pn = np_eng.ask(1, h_n)[0]
+        assert pj == pn  # same ranking from both scoring paths
+        jit_eng.tell([pj], [obj(pj)], [0.0])
+        h_j.add(pj, obj(pj))
+        np_eng.tell([pn], [obj(pn)], [0.0])
+        h_n.add(pn, obj(pn))
+
+
+def test_jit_and_numpy_ei_values_agree():
+    """EI involves erf, whose jax-f32 and scipy-f64 implementations differ
+    in the last ulp — so compare acquisition *values* to tolerance rather
+    than demanding identical tie-breaks."""
+    rng = np.random.default_rng(11)
+    X = rng.random((10, 2))
+    y = np.sin(4 * X[:, 0]) + X[:, 1]
+    gp = GaussianProcess().fit(X, y)
+    Xs = rng.random((17, 2))
+    y_best = float(y.max())
+    _, acq_jit = gp.acquisition_rank(Xs, "ei", y_best)
+    post = gp.posterior(Xs)
+    z = (post.mu - y_best) / np.maximum(post.sigma, 1e-12)
+    from repro.core.bayesopt import _norm_pdf
+    acq_np = (post.mu - y_best) * _norm_cdf(z) + post.sigma * _norm_pdf(z)
+    np.testing.assert_allclose(acq_jit, acq_np, rtol=1e-4, atol=1e-6)
+
+
+def test_acquisition_rank_nonfinite_fallback(monkeypatch):
+    """If the fused acquisition comes back non-finite (fp32 blowup), the
+    ranking is retried once with the same big noise floor posterior()
+    uses — the jitted path must not silently rank NaNs."""
+    rng = np.random.default_rng(0)
+    X = rng.random((9, 2))
+    y = np.sin(3 * X[:, 0])
+    gp = GaussianProcess().fit(X, y)
+    Xs = rng.random((6, 2))
+    noise_per_call = []
+    real = gp_module._acq_rank
+
+    def flaky(params, *args):
+        noise_per_call.append(float(np.exp(np.asarray(params["log_noise"]))))
+        order, acq = real(params, *args)
+        if len(noise_per_call) == 1:  # first attempt: pretend fp32 blew up
+            return order, jnp.full_like(acq, jnp.nan)
+        return order, acq
+
+    monkeypatch.setattr(gp_module, "_acq_rank", flaky)
+    order, acq = gp.acquisition_rank(Xs, "ei", float(y.max()))
+    assert len(noise_per_call) == 2  # retried exactly once...
+    assert noise_per_call[1] == pytest.approx(0.1)  # ...with the safe floor
+    assert np.isfinite(acq).all()
+    assert sorted(order.tolist()) == list(range(len(Xs)))
+
+
+def test_vectorized_erf_matches_math_erf():
+    z = np.linspace(-4.0, 4.0, 161)
+    expect = np.array([0.5 * (1.0 + math.erf(v / math.sqrt(2))) for v in z])
+    got = _norm_cdf(z)
+    assert isinstance(got, np.ndarray) and got.shape == z.shape
+    np.testing.assert_allclose(got, expect, atol=2e-7)
+
+
+# ---------------------------------------------------------------------------
+# cost-aware acquisition (EI-per-second)
+# ---------------------------------------------------------------------------
+
+_COST_SPACE = SearchSpace([IntDim("x", 0, 19)])
+_COST_OBSERVED = (1, 4, 7, 12, 15, 18)
+
+
+def _two_peak_value(p):
+    """Two value peaks of nearly equal height: the cheap one at x=4, the
+    slightly better one at x=15 — pure EI chases the right peak, while
+    EI-per-second should settle for the almost-as-good cheap one."""
+    x = p["x"]
+    return float(10.0 * np.exp(-((x - 4) / 3.0) ** 2)
+                 + 10.6 * np.exp(-((x - 15) / 3.0) ** 2))
+
+
+def _step_cost(p):
+    return 40.0 if p["x"] >= 10 else 0.2
+
+
+def _cost_setup():
+    """Value GP + cost GP fit on the sparse two-peak history."""
+    pts = [{"x": x} for x in _COST_OBSERVED]
+    X = _COST_SPACE.encode_many(pts)
+    y = np.array([_two_peak_value(p) for p in pts])
+    cost = np.array([_step_cost(p) for p in pts])
+    gp = GaussianProcess().fit(X, y)
+    cost_gp = GaussianProcess().fit(X, np.log(cost))
+    cands = [p for p in _COST_SPACE.enumerate()
+             if p["x"] not in _COST_OBSERVED]
+    Xs = _COST_SPACE.encode_many(cands)
+    return gp, cost_gp, cands, Xs, float(y.max()), float(cost.mean())
+
+
+def test_cost_aware_rank_is_exact_reweighting():
+    """EI-per-second == EI / (relative predicted cost)^alpha, elementwise."""
+    gp, cost_gp, _, Xs, y_best, mean_cost = _cost_setup()
+    _, acq_plain = gp.acquisition_rank(Xs, "ei", y_best)
+    _, acq_ca = gp.acquisition_rank(Xs, "ei", y_best, cost_gp=cost_gp,
+                                    cost_alpha=1.0, mean_cost=mean_cost)
+    rel = np.exp(cost_gp.posterior(Xs).mu) / mean_cost
+    rel = np.clip(rel, 1e-2, 1e2)
+    expect = np.where(acq_plain > 0, acq_plain / rel, acq_plain * rel)
+    np.testing.assert_allclose(acq_ca, expect, rtol=1e-3, atol=1e-7)
+
+
+def test_cost_aware_rank_prefers_cheap_probes():
+    gp, cost_gp, cands, Xs, y_best, mean_cost = _cost_setup()
+    order_plain, _ = gp.acquisition_rank(Xs, "ei", y_best)
+    order_ca, _ = gp.acquisition_rank(Xs, "ei", y_best, cost_gp=cost_gp,
+                                      cost_alpha=1.0, mean_cost=mean_cost)
+    # pure EI tops out next to the (expensive) higher peak; EI-per-second
+    # moves the top pick to the cheap peak's neighborhood
+    assert cands[order_plain[0]]["x"] >= 10
+    assert cands[order_ca[0]]["x"] < 10
+    # alpha=0 (full budget remaining) disables the reweighting entirely
+    order_a0, _ = gp.acquisition_rank(Xs, "ei", y_best, cost_gp=cost_gp,
+                                      cost_alpha=0.0, mean_cost=mean_cost)
+    assert list(order_a0) == list(order_plain)
+
+
+def _build_cost_history(engine):
+    h = History(_COST_SPACE)
+    for x in _COST_OBSERVED:  # both regions measured, with their costs
+        p = {"x": x}
+        engine.tell([p], [_two_peak_value(p)], [_step_cost(p)])
+        h.add(p, _two_peak_value(p), _step_cost(p))
+    return h
+
+
+def test_cost_aware_engine_deterministic_selection():
+    """Same seed, same history: the cost_aware knob deterministically moves
+    the suggestion from the expensive peak into the cheap region."""
+    plain = BayesOpt(_COST_SPACE, seed=0, acquisition="ei", n_init=2)
+    pick_plain = plain.ask(1, _build_cost_history(plain))[0]
+    aware = BayesOpt(_COST_SPACE, seed=0, acquisition="ei", n_init=2,
+                     cost_aware=True)
+    pick_aware = aware.ask(1, _build_cost_history(aware))[0]
+    assert pick_plain["x"] >= 10  # pure EI chases the higher peak
+    assert pick_aware["x"] < 10   # EI-per-second prefers the cheap peak
+    assert aware._cost_gp is not None  # cost model actually fit
+    # determinism: a fresh engine on the same history reproduces the pick
+    aware2 = BayesOpt(_COST_SPACE, seed=0, acquisition="ei", n_init=2,
+                      cost_aware=True)
+    assert aware2.ask(1, _build_cost_history(aware2))[0] == pick_aware
+
+
+def test_cost_gp_follows_warm_start_policy():
+    """The cost GP obeys the same warm-start policy as the value GP:
+    cold below warm_start_min_n (and always when warm_start=False), warm
+    refinement above once previous params exist."""
+    aware = BayesOpt(_COST_SPACE, seed=0, acquisition="ei", n_init=2,
+                     cost_aware=True, warm_start_min_n=4)
+    h = _build_cost_history(aware)  # 6 rows >= min_n
+    aware.ask(1, h)
+    assert not aware._cost_gp.last_fit_was_warm  # no previous fit yet
+    aware.ask(1, h)
+    assert aware._cost_gp.last_fit_was_warm  # refit above min_n: warm
+    off = BayesOpt(_COST_SPACE, seed=0, acquisition="ei", n_init=2,
+                   cost_aware=True, warm_start=False, warm_start_min_n=4)
+    h2 = _build_cost_history(off)
+    off.ask(1, h2)
+    off.ask(1, h2)
+    assert not off._cost_gp.last_fit_was_warm
+    cold = BayesOpt(_COST_SPACE, seed=0, acquisition="ei", n_init=2,
+                    cost_aware=True, warm_start_min_n=50)
+    h3 = _build_cost_history(cold)
+    cold.ask(1, h3)
+    cold.ask(1, h3)
+    assert not cold._cost_gp.last_fit_was_warm  # 6 rows < min_n: cold
+
+
+def test_cost_aware_budget_ramp():
+    """With most of the wall clock left the reweighting is off (alpha=0);
+    near exhaustion it is fully on."""
+    space = SearchSpace([IntDim("x", 0, 19)])
+    eng = BayesOpt(space, seed=0, cost_aware=True)
+    assert eng._cost_alpha() == 1.0  # no budget info: full EI-per-second
+    eng.note_budget(1.0)
+    assert eng._cost_alpha() == 0.0
+    eng.note_budget(0.25)
+    assert eng._cost_alpha() == pytest.approx(0.75)
+    eng.note_budget(None)
+    assert eng._cost_alpha() == 1.0
+
+
+def test_tuner_threads_cost_aware_knob():
+    space = SearchSpace([IntDim("x", 0, 9)])
+    t = Tuner(lambda p: float(p["x"]), space,
+              TunerConfig(algorithm="bo", budget=3, verbose=False,
+                          cost_aware=True))
+    assert t.engine.cost_aware is True
+    t.close()
+    with pytest.raises(ValueError, match="cost_aware"):
+        Tuner(lambda p: float(p["x"]), space,
+              TunerConfig(algorithm="ga", budget=3, verbose=False,
+                          cost_aware=True))
+
+
+def test_cost_aware_tuner_run_end_to_end():
+    """A cost-aware BO tuning run under a wall-clock budget completes and
+    records costs; the engine saw budget-pressure updates."""
+    space = SearchSpace([IntDim("x", 0, 19), IntDim("z", 0, 5)])
+
+    def obj(p):
+        return float(p["x"] * 0.3 + p["z"])
+
+    t = Tuner(obj, space,
+              TunerConfig(algorithm="bo", budget=12, seed=1, verbose=False,
+                          cost_aware=True, wall_clock_budget=30.0))
+    h = t.run()
+    t.close()
+    assert len(h) == 12
+    assert t.engine.budget_fraction_remaining is not None
+    assert 0.0 <= t.engine.budget_fraction_remaining <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# History: incremental encoding cache
+# ---------------------------------------------------------------------------
+
+def test_history_encoded_incremental_matches_full_reencode():
+    space = SearchSpace([IntDim("x", 0, 9), IntDim("z", 0, 4)])
+    h = History(space)
+    rng = np.random.default_rng(0)
+    for i in range(7):
+        h.add(space.sample(rng, 1)[0], float(i), cost_seconds=0.1 * i)
+    X1, y1 = h.encoded()
+    np.testing.assert_array_equal(X1, space.encode_many(h.points()))
+    np.testing.assert_array_equal(y1, [e.value for e in h.evals])
+    # grow past the initial capacity; only new rows are encoded
+    for i in range(40):
+        h.add(space.sample(rng, 1)[0], float(100 + i), cost_seconds=0.5)
+    X2, y2 = h.encoded()
+    np.testing.assert_array_equal(X2, space.encode_many(h.points()))
+    np.testing.assert_array_equal(y2, [e.value for e in h.evals])
+    np.testing.assert_array_equal(h.costs(),
+                                  [e.cost_seconds for e in h.evals])
+    np.testing.assert_array_equal(h.values(), y2)
+
+
+def test_history_encoded_returns_defensive_copies():
+    space = SearchSpace([IntDim("x", 0, 9)])
+    h = History(space)
+    h.add({"x": 3}, 1.0)
+    X, y = h.encoded()
+    X[0, 0] = 99.0
+    y[0] = -42.0
+    X2, y2 = h.encoded()
+    assert X2[0, 0] != 99.0 and y2[0] == 1.0
