@@ -127,6 +127,22 @@ def run(cell_key: str, emit=print, multi_pod: bool = False):
     return rows
 
 
+def _bench_value(p) -> float:
+    """The shared synthetic tuning landscape (max ~84 at inter_op=11,
+    intra_op=60, build=3) — one definition so every gated benchmark and
+    its margins measure the same objective."""
+    a, b, c = p["inter_op"], p["intra_op"], p["build"]
+    return float(50.0 * 2.718281828 ** (-((a - 11) / 5.0) ** 2)
+                 + 0.3 * b - 0.004 * (b - 25) ** 2 + 7.0 * c)
+
+
+def _bench_space():
+    from repro.core import CatDim, IntDim, SearchSpace
+    return SearchSpace([IntDim("inter_op", 1, 16),
+                        IntDim("intra_op", 0, 60, 5),
+                        CatDim("build", (1, 2, 3))])
+
+
 def run_microbench(budget: int = 24, parallelism: int = 4,
                    eval_seconds: float = 0.05, emit=print):
     """Batched ask/tell vs sequential loop on a deterministic objective.
@@ -137,19 +153,13 @@ def run_microbench(budget: int = 24, parallelism: int = 4,
     executor overlaps).  Returns rows of
     ``(algo, parallelism, best, seconds)``.
     """
-    from repro.core import CatDim, IntDim, SearchSpace, Tuner, TunerConfig
+    from repro.core import Tuner, TunerConfig
 
     def objective(p):
         time.sleep(eval_seconds)
-        a, b, c = p["inter_op"], p["intra_op"], p["build"]
-        return float(50.0 * 2.718281828 ** (-((a - 11) / 5.0) ** 2)
-                     + 0.3 * b - 0.004 * (b - 25) ** 2 + 7.0 * c)
+        return _bench_value(p)
 
-    def make_space():
-        return SearchSpace([IntDim("inter_op", 1, 16),
-                            IntDim("intra_op", 0, 60, 5),
-                            CatDim("build", (1, 2, 3))])
-
+    make_space = _bench_space
     rows = []
     # same iteration budget: the executor should cut wall-clock ~par-fold
     for algo in ["bo", "ga", "nms", "random", "exhaustive"]:
@@ -201,20 +211,16 @@ def run_async_comparison(budget: int = 16, parallelism: int = 4,
     """
     import tempfile
 
-    from repro.core import CatDim, IntDim, SearchSpace, Tuner, TunerConfig
+    from repro.core import Tuner, TunerConfig
     from repro.core import gp as gp_module
     from repro.tuning.objective import CountingEvaluator
 
     def objective(p):
-        a, b = p["inter_op"], p["intra_op"]
-        time.sleep(slow_s if (a + b) % 4 == 0 else fast_s)
-        return float(50.0 * 2.718281828 ** (-((a - 11) / 5.0) ** 2)
-                     + 0.3 * b - 0.004 * (b - 25) ** 2 + 7.0 * p["build"])
+        time.sleep(slow_s if (p["inter_op"] + p["intra_op"]) % 4 == 0
+                   else fast_s)
+        return _bench_value(p)
 
-    def make_space():
-        return SearchSpace([IntDim("inter_op", 1, 16),
-                            IntDim("intra_op", 0, 60, 5),
-                            CatDim("build", (1, 2, 3))])
+    make_space = _bench_space
 
     # BO is gated too since the compile-once surrogate bounded its
     # suggestion overhead (bucketed/padded GP shapes + fused jitted
@@ -307,6 +313,126 @@ def run_async_comparison(budget: int = 16, parallelism: int = 4,
     return rows, ok
 
 
+def run_multi_fidelity_comparison(budget: int = 20, parallelism: int = 4,
+                                  fast_s: float = 0.04, slow_s: float = 0.32,
+                                  emit=print):
+    """Successive-halving (ASHA rungs + preemption) vs the full-fidelity
+    async loop on the skewed-cost objective.
+
+    Both runs spend the same logical budget (``budget`` full-measurement
+    equivalents).  The multi-fidelity run screens at 1/9 cost and
+    promotes the top third per rung, so it should complete a
+    full-fidelity measurement within 1% of the full run's best value in
+    well under half the full run's wall clock — that ratio is the CI
+    gate, together with exactly-once accounting under preemption: every
+    real objective call is recorded exactly once (nothing lost when a
+    preempt lands after a worker started, nothing double-recorded when
+    it is cancelled first).
+
+    Low fidelity is simulated honestly: cost scales with fidelity and
+    the value carries a deterministic point-dependent bias that shrinks
+    as fidelity rises, so promotion decisions are made on noisy
+    rankings, exactly like short-run measurements in the paper's
+    harness.
+    """
+    from repro.core import Tuner, TunerConfig
+    from repro.tuning.objective import Evaluator
+
+    true_value = _bench_value
+
+    class SkewedFidelityObjective(Evaluator):
+        supports_fidelity = True
+
+        def __init__(self):
+            self.log = []  # (t_done, key, fidelity, value) per real call
+
+        def __call__(self, p, fidelity=None):
+            f = 1.0 if fidelity is None else float(fidelity)
+            base = slow_s if (p["inter_op"] + p["intra_op"]) % 4 == 0 else fast_s
+            time.sleep(base * f)
+            v = true_value(p)
+            # deterministic measurement bias, shrinking with fidelity
+            wiggle = ((p["inter_op"] * 13 + p["intra_op"] * 7
+                       + p["build"] * 3) % 9 - 4) / 2.0
+            v += (1.0 - f) * wiggle
+            key = (p["inter_op"], p["intra_op"], p["build"])
+            self.log.append((time.perf_counter(), key, f, v))
+            # declared cost: the simulated measurement is the cost model's
+            # training signal and must stay deterministic
+            return v, {"cost_seconds": base * f}
+
+    make_space = _bench_space
+
+    # -- full-fidelity reference run -----------------------------------------
+    full_obj = SkewedFidelityObjective()
+    t_full = Tuner(full_obj, make_space(),
+                   TunerConfig(algorithm="random", budget=budget, seed=0,
+                               verbose=False, parallelism=parallelism))
+    t0 = time.perf_counter()
+    h_full = t_full.run()
+    full_seconds = time.perf_counter() - t0
+    t_full.close()
+    best_full = h_full.best().value
+
+    # -- successive-halving run, same logical budget -------------------------
+    mf_obj = SkewedFidelityObjective()
+    t_mf = Tuner(mf_obj, make_space(),
+                 TunerConfig(algorithm="random", budget=budget, seed=0,
+                             verbose=False, parallelism=parallelism,
+                             multi_fidelity=True))
+    t0 = time.perf_counter()
+    h_mf = t_mf.run()
+    mf_seconds = time.perf_counter() - t0
+    rungs = t_mf.rung_scheduler.stats()
+    t_mf.close()
+
+    # time-to-target: first *full-fidelity* measurement within 1% of the
+    # full run's best value (partial values are biased by construction and
+    # do not count as "reached")
+    target = best_full - 0.01 * abs(best_full)
+    t_target = None
+    for t_done, _key, f, v in sorted(mf_obj.log):
+        if f >= 1.0 and v >= target:
+            t_target = t_done - t0
+            break
+
+    # exactly-once accounting under preemption: every real measurement is
+    # recorded exactly once — no losses (a preempt landing after the worker
+    # started must still record) and no double-records (a cancelled preempt
+    # must record nothing)
+    measured = [e for e in h_mf.evals if not e.meta.get("memoized")]
+    lost = len(mf_obj.log) - len(measured)
+    seen_keys = [( *(e.point[k] for k in ("inter_op", "intra_op", "build")),
+                  round(e.fidelity, 9)) for e in measured]
+    double = len(seen_keys) - len(set(seen_keys))
+
+    ratio = (t_target / full_seconds) if t_target is not None else float("inf")
+    ok = t_target is not None and ratio <= 0.5 and lost == 0 and double == 0
+    rows = [{
+        "mode": "multi_fidelity", "algo": "random",
+        "parallelism": parallelism, "budget_full_equivalents": budget,
+        "full_best": best_full, "full_seconds": full_seconds,
+        # None when nothing reached the top rung — the ratio gate then
+        # fails cleanly (t_target stays None) instead of crashing here
+        "mf_best_full_fidelity": max(
+            (v for _t, _k, f, v in mf_obj.log if f >= 1.0), default=None),
+        "mf_measurements": len(measured), "mf_seconds": mf_seconds,
+        "time_to_within_1pct_s": t_target,
+        "time_to_target_ratio": None if t_target is None else round(ratio, 4),
+        "lost_results": lost, "double_recorded": double,
+        "rungs": rungs,
+    }]
+    emit(f"mfbench,random,{parallelism},best_full={best_full:.4f},"
+         f"full_s={full_seconds:.3f},t_target="
+         f"{-1.0 if t_target is None else t_target:.3f},"
+         f"ratio={ratio:.3f},lost={lost},double={double}")
+    for row in rungs:
+        emit(f"mfrung,{row['rung']},fidelity={row['fidelity']},"
+             f"started={row['started']},completed={row['completed']},"
+             f"promoted={row['promoted']},preempted={row['preempted']}")
+    return rows, ok
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--cell", choices=sorted(CELLS))
@@ -317,37 +443,64 @@ def main(argv=None):
     ap.add_argument("--async-loop", action="store_true",
                     help="add the completion-driven vs batch-barrier "
                          "comparison + memo-cache re-evaluation check")
+    ap.add_argument("--multi-fidelity", action="store_true",
+                    help="add the successive-halving vs full-fidelity "
+                         "time-to-target comparison + exactly-once "
+                         "preemption accounting check (runs at "
+                         "max(--budget, 20) full-measurement equivalents: "
+                         "smaller budgets leave too few rung completions "
+                         "for a stable gate)")
     ap.add_argument("--check", action="store_true",
                     help="exit nonzero if the async loop does not beat the "
-                         "batch loop, the memo cache re-evaluates, or BO "
-                         "recompiles after warmup (CI gate)")
+                         "batch loop, the memo cache re-evaluates, BO "
+                         "recompiles after warmup, or successive halving "
+                         "misses its time-to-target / accounting gates "
+                         "(CI gate)")
     ap.add_argument("--parallelism", type=int, default=4)
     ap.add_argument("--budget", type=int, default=24)
     args = ap.parse_args(argv)
     ok = True
-    if args.microbench or args.async_loop:
+    failures = []
+    if args.microbench or args.async_loop or args.multi_fidelity:
         rows = []
         if args.microbench:
             rows += run_microbench(budget=args.budget,
                                    parallelism=args.parallelism)
         if args.async_loop:
-            async_rows, ok = run_async_comparison(
+            async_rows, ok_async = run_async_comparison(
                 budget=min(args.budget, 16), parallelism=args.parallelism)
             rows += async_rows
+            if not ok_async:
+                failures.append(
+                    "async-loop: completion-driven loop did not beat the "
+                    "batch barrier, the memo cache re-evaluated, or the BO "
+                    "surrogate recompiled after warmup (compile-once "
+                    "contract)")
+        if args.multi_fidelity:
+            mf_budget = max(args.budget, 20)
+            if mf_budget != args.budget:
+                print(f"mfbench_note,budget_floored,{args.budget}->"
+                      f"{mf_budget} (gate needs enough rung completions)")
+            mf_rows, ok_mf = run_multi_fidelity_comparison(
+                budget=mf_budget, parallelism=args.parallelism)
+            rows += mf_rows
+            if not ok_mf:
+                failures.append(
+                    "multi-fidelity: successive halving did not reach within "
+                    "1% of the full-fidelity best in <= 0.5x its wall clock, "
+                    "or preemption lost/double-recorded a result")
+        ok = not failures
     else:
         if not args.cell:
-            ap.error("--cell is required unless --microbench or "
-                     "--async-loop is given")
+            ap.error("--cell is required unless --microbench, --async-loop "
+                     "or --multi-fidelity is given")
         rows = run(args.cell, multi_pod=args.multi_pod)
     if args.out:
         p = pathlib.Path(args.out)
         p.parent.mkdir(parents=True, exist_ok=True)
         p.write_text(json.dumps(rows, indent=1))
     if args.check and not ok:
-        raise SystemExit(
-            "async-loop benchmark regression: completion-driven loop did not "
-            "beat the batch barrier, the memo cache re-evaluated, or the BO "
-            "surrogate recompiled after warmup (compile-once contract)")
+        raise SystemExit("benchmark regression: " + "; ".join(failures))
 
 
 if __name__ == "__main__":

@@ -6,6 +6,7 @@ mesh (each evaluation lowers + compiles the cell).
         [--arch qwen3-moe-30b-a3b] [--shape train_4k] [--budget 12] \
         [--parallelism 4] [--wall-clock 600] [--loop async|batch] \
         [--memo-cache artifacts/memo_cache.json] [--cost-aware]
+        [--multi-fidelity]
 
 How it runs (completion-driven ask/tell):
 
@@ -56,6 +57,10 @@ def main():
     ap.add_argument("--cost-aware", action="store_true",
                     help="BO: EI-per-second acquisition (prefer cheap "
                          "compiles, sharpening as --wall-clock runs out)")
+    ap.add_argument("--multi-fidelity", action="store_true",
+                    help="successive-halving rungs: cheap fast-analysis "
+                         "screening, top-1/eta promoted to full depth "
+                         "(--budget counts full-measurement equivalents)")
     args = ap.parse_args()
     argv = [
         "--arch", args.arch, "--shape", args.shape, "--algo", args.algo,
@@ -69,6 +74,8 @@ def main():
         argv += ["--wall-clock", str(args.wall_clock)]
     if args.cost_aware:
         argv += ["--cost-aware"]
+    if args.multi_fidelity:
+        argv += ["--multi-fidelity"]
     tune_main(argv)
 
 

@@ -104,6 +104,7 @@ class BayesOpt(Engine):
         jit_acquisition: bool = True,
         warm_start: bool = True,
         warm_start_min_n: int = 64,
+        fidelity_feature: bool = False,
     ):
         super().__init__(space, seed)
         self.n_init = min(n_init, max(2, space.grid_size() // 2))
@@ -115,6 +116,12 @@ class BayesOpt(Engine):
         self.jit_acquisition = jit_acquisition
         self.warm_start = warm_start
         self.warm_start_min_n = warm_start_min_n
+        #: multi-fidelity mode: append each observation's fidelity as an
+        #: extra GP input column (candidates are scored at fidelity 1.0),
+        #: so partial measurements inform the surrogate without being
+        #: mistaken for exact values.  Off by default: the single-fidelity
+        #: suggestion trace stays bit-for-bit identical.
+        self.fidelity_feature = fidelity_feature
         self._init_points = None
         self._gp: Optional[GaussianProcess] = None
         self._cost_gp: Optional[GaussianProcess] = None
@@ -141,8 +148,13 @@ class BayesOpt(Engine):
                 return pts, enc
             return [pts[i] for i in idx], enc[idx]
         cands = self.space.sample(self.rng, self.max_candidates // 2)
-        # local neighborhood of the incumbent (exploitation half)
-        best = history.best().point
+        # local neighborhood of the incumbent (exploitation half); in
+        # fidelity mode the incumbent must be a full measurement — a
+        # partial value's optimistic bias would center exploitation on
+        # measurement noise (same guard as y_best in _ask)
+        best = history.best(full_fidelity_only=self.fidelity_feature and bool(
+            np.any((history.fidelities() >= 1.0)
+                   & np.isfinite(history.values())))).point
         for _ in range(self.max_candidates // 2):
             cands.append(self.space.perturb(self.rng, best, radius=2))
         seen_keys = set()
@@ -275,11 +287,25 @@ class BayesOpt(Engine):
             return batch
         # failed configs (OOM etc.) get the worst finite value (pessimism)
         y = np.where(finite, y, y[finite].min())
+        if self.fidelity_feature:
+            # fidelity is an input feature: the GP learns how partial
+            # measurements relate to full ones instead of treating a
+            # cheap noisy value as ground truth
+            X = np.concatenate([X, history.fidelities()[:, None]], axis=1)
 
         gp = self._fit_surrogate(X, y)
         cost_gp = self._fit_cost_model(X, history)
         cands, Xs = self._candidates(history)
-        y_best = float(np.max(y))
+        if self.fidelity_feature:
+            # candidates are scored as full measurements
+            Xs = np.concatenate([Xs, np.ones((Xs.shape[0], 1))], axis=1)
+            # ... and the incumbent must be one too: a partial value's
+            # optimistic bias would otherwise set a y_best no full
+            # measurement can beat, collapsing the acquisition
+            full = finite & (history.fidelities() >= 1.0)
+            y_best = float(np.max(y[full])) if full.any() else float(np.max(y))
+        else:
+            y_best = float(np.max(y))
         order = self._rank(gp, Xs, y_best, cost_gp)
 
         # top-n by acquisition; stable sort so n=1 picks np.argmax's candidate

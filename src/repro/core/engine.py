@@ -58,11 +58,21 @@ class Engine:
         raise NotImplementedError
 
     def tell(self, points: Sequence[Dict], values: Sequence[float],
-             costs: Optional[Sequence[float]] = None) -> None:
+             costs: Optional[Sequence[float]] = None,
+             fidelities: Optional[Sequence[float]] = None) -> None:
         """Report objective values for previously asked points.
 
         May be called once per completed evaluation (completion order)
         or once per batch; both must leave the engine in the same state.
+
+        ``fidelities`` (multi-fidelity tuning) marks which values came
+        from partial measurements (< 1.0 = cheaper, noisier).  The base
+        implementation ignores it — engines whose state machines want
+        exact values (GA's population, NMS's simplex) treat partial
+        values as the ASHA literature does: good enough to rank on.
+        BayesOpt instead reads fidelities straight from the history as a
+        surrogate input feature, so its GP never mistakes a partial
+        value for an exact one.
         """
         self._record_costs(costs, len(points))
         for p, v in zip(points, values):

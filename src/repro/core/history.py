@@ -36,6 +36,9 @@ class Evaluation:
     index: int
     cost_seconds: float = 0.0
     meta: dict = field(default_factory=dict)
+    #: fraction of a full measurement this value came from (multi-fidelity
+    #: tuning records partial measurements too; 1.0 = exact/full)
+    fidelity: float = 1.0
 
 
 class History:
@@ -50,15 +53,17 @@ class History:
         self._enc_X = np.zeros((0, space.n_dims))
         self._enc_y = np.zeros((0,))
         self._enc_costs = np.zeros((0,))
+        self._enc_fids = np.zeros((0,))
         self._enc_n = 0
 
     def __len__(self) -> int:
         return len(self.evals)
 
     def add(self, point: Dict, value: float, cost_seconds: float = 0.0,
-            meta: Optional[dict] = None) -> Evaluation:
+            meta: Optional[dict] = None,
+            fidelity: float = 1.0) -> Evaluation:
         ev = Evaluation(dict(point), float(value), len(self.evals),
-                        cost_seconds, meta or {})
+                        cost_seconds, meta or {}, float(fidelity))
         self.evals.append(ev)
         key = self.space.key(point)
         self._by_key[key] = ev
@@ -99,8 +104,12 @@ class History:
     def seen(self, point: Dict) -> bool:
         return self.space.key(point) in self._by_key
 
-    def best(self) -> Evaluation:
-        finite = [e for e in self.evals if math.isfinite(e.value)]
+    def best(self, full_fidelity_only: bool = False) -> Evaluation:
+        """Best finite evaluation; ``full_fidelity_only`` restricts to
+        full measurements (a multi-fidelity run's partial values are
+        noisy/biased by construction and should not win "best")."""
+        finite = [e for e in self.evals if math.isfinite(e.value)
+                  and (not full_fidelity_only or e.fidelity >= 1.0)]
         assert finite, "no finite evaluations"
         return max(finite, key=lambda e: e.value)
 
@@ -129,11 +138,14 @@ class History:
             self._enc_y = np.concatenate([self._enc_y, np.zeros(new_cap - cap)])
             self._enc_costs = np.concatenate(
                 [self._enc_costs, np.zeros(new_cap - cap)])
+            self._enc_fids = np.concatenate(
+                [self._enc_fids, np.zeros(new_cap - cap)])
         for i in range(self._enc_n, n):
             e = self.evals[i]
             self._enc_X[i] = self.space.encode(e.point)
             self._enc_y[i] = e.value
             self._enc_costs[i] = e.cost_seconds
+            self._enc_fids[i] = e.fidelity
         self._enc_n = n
 
     def values(self) -> np.ndarray:
@@ -144,6 +156,11 @@ class History:
         """Measured ``cost_seconds`` per evaluation (0 where unmeasured)."""
         self._refresh_encoding_cache()
         return self._enc_costs[:len(self.evals)].copy()
+
+    def fidelities(self) -> np.ndarray:
+        """Fidelity per evaluation (1.0 = full measurement)."""
+        self._refresh_encoding_cache()
+        return self._enc_fids[:len(self.evals)].copy()
 
     def encoded(self) -> Tuple[np.ndarray, np.ndarray]:
         self._refresh_encoding_cache()
@@ -180,7 +197,8 @@ class History:
         return json.dumps(
             [
                 {"point": e.point, "value": e.value, "index": e.index,
-                 "cost_seconds": e.cost_seconds, "meta": e.meta}
+                 "cost_seconds": e.cost_seconds, "meta": e.meta,
+                 "fidelity": e.fidelity}
                 for e in self.evals
             ]
         )
@@ -197,5 +215,5 @@ class History:
         h = cls(space)
         for rec in json.loads(pathlib.Path(path).read_text()):
             h.add(rec["point"], rec["value"], rec.get("cost_seconds", 0.0),
-                  rec.get("meta"))
+                  rec.get("meta"), rec.get("fidelity", 1.0))
         return h

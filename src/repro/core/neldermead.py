@@ -111,7 +111,7 @@ class NelderMead(Engine):
         return batch[:n]
 
     def tell(self, points: Sequence[Dict], values: Sequence[float],
-             costs=None) -> None:
+             costs=None, fidelities=None) -> None:
         self._record_costs(costs, len(points))
         for p, v in zip(points, values):
             self._told.setdefault(self.space.key(p), (p, v))

@@ -34,6 +34,15 @@ store (atomic writes + cross-process file locking), so a re-run or a
 resumed run of the same tuning job re-evaluates nothing and multiple
 hosts sharing a filesystem reuse each other's measurements.
 
+``multi_fidelity=True`` layers a successive-halving rung scheduler
+(ASHA; see ``repro.tuning.fidelity``) over the async loop: fresh
+candidates are screened with cheap partial measurements, survivors are
+promoted fidelity by fidelity, and in-flight promotions that have been
+outclassed are preempted through the executor.  The budget then counts
+full-measurement equivalents (sum of completed fidelities), so the
+scheduler spends what the same budget of full measurements would have —
+just on many more candidates.
+
 Objectives follow the explicit evaluator protocol (``(value, meta)``;
 see ``repro.tuning.objective``); plain scalar callables are adapted
 automatically.  Failures (OOM, compile error, timeout) surface as
@@ -89,6 +98,18 @@ class TunerConfig:
     memo_cache_path: Optional[str] = None  # disk-backed cross-run memo cache
     cost_aware: bool = False  # BO: EI-per-second acquisition (prefer cheap
     # probes, ramping in as wall_clock_budget nears exhaustion)
+    # -- multi-fidelity (successive halving) ---------------------------------
+    multi_fidelity: bool = False  # screen candidates at partial fidelity,
+    # promote survivors rung by rung (ASHA); budget then counts
+    # full-measurement *equivalents* (sum of fidelities), not evaluations
+    mf_eta: float = 3.0  # rung reduction factor (fidelity ratio + survivor
+    # fraction 1/eta between adjacent rungs)
+    mf_min_fidelity: float = 0.1  # bottom-rung fidelity floor
+    mf_promote_quantile: Optional[float] = None  # per-rung survivor
+    # quantile (default 1/eta)
+    mf_preempt: bool = True  # kill in-flight promotions whose source rung
+    # has since outclassed them (executor preempt: cancelled if unstarted,
+    # recorded normally if already running)
 
 
 class Tuner:
@@ -114,6 +135,17 @@ class Tuner:
                     "cost_aware acquisition is a BayesOpt feature "
                     f"(algorithm={config.algorithm!r})")
             engine_kwargs.setdefault("cost_aware", True)
+        if config.multi_fidelity:
+            if config.loop != "async":
+                raise ValueError(
+                    "multi_fidelity requires the completion-driven loop "
+                    f"(loop={config.loop!r}): rung promotion and preemption "
+                    "are decided per completion, which a batch barrier "
+                    "cannot express")
+            if config.algorithm == "bo":
+                # partial observations enter the surrogate with a fidelity
+                # feature, never as exact values
+                engine_kwargs.setdefault("fidelity_feature", True)
         self.engine: Engine = ENGINES[config.algorithm](
             space, seed=config.seed, **engine_kwargs
         )
@@ -130,6 +162,7 @@ class Tuner:
             cache_path=config.memo_cache_path,
         )
         self.history = History(space)
+        self.rung_scheduler = None  # set by the multi-fidelity loop
         if config.checkpoint_path and pathlib.Path(config.checkpoint_path).exists():
             self._resume(config.checkpoint_path)
 
@@ -151,10 +184,12 @@ class Tuner:
         """
         loaded = History.load(path, self.space)
         for ev in loaded.evals:
-            self.history.add(ev.point, ev.value, ev.cost_seconds, ev.meta)
+            self.history.add(ev.point, ev.value, ev.cost_seconds, ev.meta,
+                             ev.fidelity)
         self.engine.tell([ev.point for ev in loaded.evals],
                          [ev.value for ev in loaded.evals],
-                         [ev.cost_seconds for ev in loaded.evals])
+                         [ev.cost_seconds for ev in loaded.evals],
+                         fidelities=[ev.fidelity for ev in loaded.evals])
         if self.config.verbose and len(loaded):
             print(f"[tuner] resumed {len(loaded)} evaluations from {path}")
 
@@ -171,10 +206,11 @@ class Tuner:
             f"({r.cost_seconds:.1f}s) {r.point}"
         )
 
-    def _record(self, r: EvalResult) -> None:
+    def _record(self, r: EvalResult, fidelity: float = 1.0) -> None:
         """tell + append + checkpoint for one completed evaluation."""
-        self.engine.tell([r.point], [r.value], [r.cost_seconds])
-        self.history.add(r.point, r.value, r.cost_seconds, r.meta)
+        self.engine.tell([r.point], [r.value], [r.cost_seconds],
+                         fidelities=[fidelity])
+        self.history.add(r.point, r.value, r.cost_seconds, r.meta, fidelity)
         if self.config.checkpoint_path:
             self.history.save(self.config.checkpoint_path)
         self._report(r)
@@ -238,6 +274,156 @@ class Tuner:
             # must not leave stale pending marks behind; anything still
             # marked here is by definition unmeasured (add() unmarks on
             # completion), so clearing the whole set is exact
+            self.history.clear_inflight()
+        return self.history
+
+    # -- multi-fidelity successive-halving loop ------------------------------
+    def _run_multi_fidelity(self, budget: int,
+                            wall_clock: Optional[float]) -> History:
+        """Completion-driven ASHA on top of the async machinery.
+
+        Fresh engine candidates enter at the bottom rung (cheap partial
+        measurements); completions in the top ``1/mf_eta`` of their rung
+        are resubmitted at the next fidelity the moment a worker frees,
+        and in-flight promotions whose source rung has since outclassed
+        them are preempted (cancelled when still queued; recorded
+        normally when a worker already started — exactly-once either
+        way).  ``budget`` counts full-measurement *equivalents*: the sum
+        of completed fidelities, so ``budget=50`` spends what 50 full
+        measurements would have.
+
+        Every completion — partial or full — lands in history with its
+        fidelity and is told to the engine (BO reads the fidelity column
+        as a surrogate feature; ranking engines use partial values as
+        ASHA does).  ``history.best(full_fidelity_only=True)`` is the
+        trustworthy incumbent.
+
+        An objective without fidelity support cannot cheapen a
+        measurement, so rungs would all cost the same and "promotion"
+        would just re-measure points: the loop degenerates to the plain
+        completion-driven loop instead.
+        """
+        from repro.tuning.fidelity import RungScheduler
+
+        if not getattr(self.objective, "supports_fidelity", False):
+            if self.config.verbose:
+                print("[tuner] objective has no fidelity support; "
+                      "multi_fidelity degenerates to the async loop")
+            return self._run_async(budget, wall_clock)
+
+        cfg = self.config
+        sched = RungScheduler(eta=cfg.mf_eta,
+                              min_fidelity=cfg.mf_min_fidelity,
+                              promote_quantile=cfg.mf_promote_quantile)
+        self.rung_scheduler = sched  # observability (bench rung stats)
+        t_start = time.time()
+        deadline = t_start + wall_clock if wall_clock is not None else None
+        outstanding: List[PendingEval] = []
+        spend = 0.0  # full-measurement equivalents consumed
+        # checkpoint resume: rebuild rung state (results AND promotion
+        # marks — see RungScheduler.replay) and budget accounting from the
+        # replayed history, so already-screened survivors stay promotable
+        # exactly once and the budget is not re-spent from zero
+        for e in self.history.evals:
+            sched.replay(self.space.key(e.point), e.point, e.value,
+                         e.fidelity)
+            spend += e.fidelity
+
+        def consume(done: PendingEval) -> None:
+            nonlocal spend
+            r = done.result()
+            if r.meta.get("preempted"):
+                return  # cancelled pre-start: nothing was measured
+            rung = done.rung if done.rung is not None else 0
+            # budget and history record what was *delivered*, not what the
+            # rung asked for: the executor upgrades requests the evaluator
+            # cannot serve partially (meta["fidelity"] / a normalized
+            # pending fidelity say so) and those must be charged — and
+            # trusted — as full measurements
+            fid = r.meta.get("fidelity")
+            if fid is None:
+                fid = 1.0 if done.fidelity is None else done.fidelity
+            fid = float(fid)
+            spend += fid  # memo hits count too: budget is logical spend
+            sched.on_result(self.space.key(done.point), done.point,
+                            r.value, rung)
+            self._record(r, fidelity=fid)
+
+        try:
+            while spend < budget:
+                if deadline is not None and time.time() >= deadline:
+                    self._wall_clock_exhausted(wall_clock)
+                    break
+                capacity = cfg.parallelism - len(outstanding)
+                submitted_any = False
+                # promotions outrank fresh probes for free workers: a
+                # survivor's next rung is the highest-value measurement
+                # the ladder currently knows how to ask for
+                while capacity > 0:
+                    job = sched.next_promotion()
+                    if job is None:
+                        break
+                    point, rung = job
+                    pend = self.executor.submit(
+                        [point], fidelity=sched.fidelity(rung), rung=rung)[0]
+                    sched.on_started(self.space.key(point), point, rung)
+                    outstanding.append(pend)
+                    capacity -= 1
+                    submitted_any = True
+                if capacity > 0:
+                    if deadline is not None:
+                        self.engine.note_budget(
+                            max(0.0, (deadline - time.time()) / wall_clock))
+                    points = self.engine.ask(capacity, self.history)
+                    for p in points[:capacity]:
+                        if self.history.seen(p) or self.history.pending(p):
+                            continue  # known at some rung / already in flight
+                        pend = self.executor.submit(
+                            [p], fidelity=sched.base_fidelity, rung=0)[0]
+                        sched.on_started(self.space.key(p), p, 0)
+                        self.history.mark_inflight([p])
+                        outstanding.append(pend)
+                        submitted_any = True
+                # preemption scan: an in-flight promotion whose source-rung
+                # value fell below the current cutoff cannot win anything
+                # by finishing (the cutoff can transiently dip when the
+                # survivor count increments — see RungScheduler.dominated)
+                if cfg.mf_preempt:
+                    for pend in list(outstanding):
+                        if (pend.rung and not pend.preempted
+                                and not pend.done()
+                                and sched.dominated(self.space.key(pend.point),
+                                                    pend.rung)):
+                            if self.executor.preempt(pend) == "cancelled":
+                                outstanding.remove(pend)
+                                sched.on_preempted(self.space.key(pend.point),
+                                                   pend.rung)
+                            # "running": the worker got there first; its
+                            # result arrives and is recorded normally
+                if not outstanding:
+                    if not submitted_any:
+                        break  # engine exhausted, no promotions possible
+                    continue
+                done = self.executor.next_completed(outstanding,
+                                                    deadline=deadline)
+                if done is None:
+                    self._wall_clock_exhausted(wall_clock)
+                    break
+                outstanding.remove(done)
+                consume(done)
+            # drain: promotions are event-driven, so the loop can have
+            # dispatched slightly past the logical budget — those
+            # measurements are paid for and must be recorded (exactly-once
+            # accounting), never silently dropped.  A wall-clock deadline
+            # still wins: past it, next_completed abandons as usual.
+            while outstanding:
+                done = self.executor.next_completed(outstanding,
+                                                    deadline=deadline)
+                if done is None:
+                    break  # deadline: in-flight work is abandoned unrecorded
+                outstanding.remove(done)
+                consume(done)
+        finally:
             self.history.clear_inflight()
         return self.history
 
@@ -316,6 +502,8 @@ class Tuner:
                 parallelism=self.config.parallelism, backend="thread",
                 timeout=self.config.eval_timeout, cache=old.cache)
             old.close()
+        if self.config.multi_fidelity:
+            return self._run_multi_fidelity(budget, wall_clock)
         if self.config.loop == "batch":
             return self._run_batch(budget, wall_clock)
         return self._run_async(budget, wall_clock)

@@ -30,7 +30,13 @@ runs (and other hosts sharing the filesystem) re-evaluate nothing.
 ``--cost-aware`` (BO) switches the acquisition to EI-per-second: a
 second GP predicts each candidate's measurement cost and the engine
 prefers cheap probes, ramping the preference in as ``--wall-clock``
-nears exhaustion.
+nears exhaustion.  ``--multi-fidelity`` layers successive-halving rungs
+over the loop: candidates are screened with the cheap fast-analysis
+compile (one compile instead of three), the top ``1/eta`` survivors are
+promoted to the full analysis depth, and in-flight promotions that have
+been outclassed are preempted; ``--budget`` then counts full-measurement
+equivalents.  The roofline objective has exactly two analysis depths, so
+the default ladder is the matching 2-rung one (``--mf-min-fidelity``).
 """
 import argparse
 import math
@@ -77,6 +83,25 @@ def main(argv=None):
                          "expected improvement against predicted measurement "
                          "cost, preferring cheap probes as --wall-clock "
                          "nears exhaustion")
+    ap.add_argument("--multi-fidelity", action="store_true",
+                    help="successive-halving (ASHA) rungs: screen candidates "
+                         "with cheap fast-analysis compiles, promote the top "
+                         "1/eta per rung to full analysis depth; --budget "
+                         "then counts full-measurement equivalents")
+    ap.add_argument("--mf-eta", type=float, default=3.0,
+                    help="rung reduction factor (fidelity ratio and survivor "
+                         "fraction between adjacent rungs)")
+    ap.add_argument("--mf-min-fidelity", type=float, default=0.33,
+                    help="bottom-rung fidelity floor (fraction of a full "
+                         "measurement).  The roofline objective has two "
+                         "analysis depths (fast vs full), so the default "
+                         "builds the matching 2-rung ladder [1/3, 1]; a "
+                         "deeper ladder would re-serve identical fast "
+                         "results at the middle rungs while still charging "
+                         "budget for them")
+    ap.add_argument("--no-mf-preempt", action="store_true",
+                    help="disable preemption of in-flight promotions whose "
+                         "source rung has since outclassed them")
     args = ap.parse_args(argv)
     if args.cost_aware and args.algo != "bo":
         ap.error("--cost-aware requires --algo bo")
@@ -100,10 +125,19 @@ def main(argv=None):
                     wall_clock_budget=args.wall_clock,
                     loop=args.loop,
                     memo_cache_path=args.memo_cache,
-                    cost_aware=args.cost_aware),
+                    cost_aware=args.cost_aware,
+                    multi_fidelity=args.multi_fidelity,
+                    mf_eta=args.mf_eta,
+                    mf_min_fidelity=args.mf_min_fidelity,
+                    mf_preempt=not args.no_mf_preempt),
     )
     history = tuner.run()
     tuner.close()
+    if args.multi_fidelity and tuner.rung_scheduler is not None:
+        for row in tuner.rung_scheduler.stats():
+            print(f"[tune] rung {row['rung']} (fidelity {row['fidelity']}): "
+                  f"started={row['started']} completed={row['completed']} "
+                  f"promoted={row['promoted']} preempted={row['preempted']}")
     if not any(math.isfinite(e.value) for e in history.evals):
         print(f"[tune] no successful evaluations "
               f"({len(history)} run, all failed or budget expired first)")
@@ -112,7 +146,10 @@ def main(argv=None):
             out.parent.mkdir(parents=True, exist_ok=True)
             out.write_text(history.to_json())
         return history
-    best = history.best()
+    full_only = (args.multi_fidelity
+                 and any(e.fidelity >= 1.0 and math.isfinite(e.value)
+                         for e in history.evals))
+    best = history.best(full_fidelity_only=full_only)
     print(f"[tune] best throughput {best.value:.4g} tok/s at {best.point}")
     print(f"[tune] backend config: {config_from_point(best.point, BASELINE)}")
     print(f"[tune] sampled-range coverage: {history.sampled_range_fraction()}")

@@ -18,7 +18,15 @@
 Both implement the explicit evaluator protocol
 (``repro.tuning.objective.Evaluator``): ``__call__(point) -> (value,
 meta)``, declared via ``returns_meta = True`` so the tuner/executor never
-have to sniff return types.
+have to sniff return types.  Both also opt into the **fidelity**
+protocol (``supports_fidelity``) for multi-fidelity tuning:
+``WallClockEvaluator`` scales its variance-adaptive timing loop,
+``RooflineEvaluator`` drops to the fast (single-compile, trip-scaled)
+analysis depth; in both, a full-fidelity request takes exactly the same
+code path as a plain no-fidelity call.  (Note the *measurement loop
+itself* changed in this revision: ``WallClockEvaluator`` now defaults to
+variance-adaptive timing — pass ``adaptive=False`` for the historical
+fixed-``iters`` loop.)
 """
 from __future__ import annotations
 
@@ -53,37 +61,74 @@ class RooflineEvaluator(Evaluator):
         self.chips_per_pod = chips_per_pod
         self.base = base
         self.hbm_bytes = hbm_bytes
+        # the shared store is loaded exactly once here; later in-memory
+        # misses re-consult it (a locked file read) before compiling, so
+        # entries written by concurrent hosts after startup are reused
         self.store: CacheStore = open_store(cache_path)
         self._cache: Dict[str, dict] = self.store.load()
 
-    def _key(self, bc: BackendConfig) -> str:
-        return json.dumps(
-            {"arch": self.arch, "shape": self.shape_name, "mp": self.multi_pod,
-             "bc": bc.__dict__}, sort_keys=True)
+    supports_fidelity = True
 
-    def __call__(self, point: Dict) -> Tuple[float, dict]:
+    def _key(self, bc: BackendConfig, fast: bool = False) -> str:
+        d = {"arch": self.arch, "shape": self.shape_name, "mp": self.multi_pod,
+             "bc": bc.__dict__}
+        if fast:  # full-fidelity keys keep the historical format unchanged
+            d["analysis"] = "fast"
+        return json.dumps(d, sort_keys=True)
+
+    def __call__(self, point: Dict,
+                 fidelity: Optional[float] = None) -> Tuple[float, dict]:
         from repro.launch.dryrun import analyze_cell  # lazy: sets XLA_FLAGS
 
+        # analysis-depth fidelity: a partial measurement drops the unrolled
+        # 1-/2-period cost compiles (``fast`` analysis — trip-count scaling,
+        # a documented few-% overcount) instead of the exact extrapolation,
+        # cutting the per-point compile count from three to one
+        fast = fidelity is not None and fidelity < 1.0
         bc = config_from_point(point, self.base)
-        key = self._key(bc)
-        if key in self._cache:
-            rec = self._cache[key]
-        else:
+        key = self._key(bc, fast=fast)
+        rec = self._cache.get(key)
+        if rec is None:
+            # in-memory miss: another host sharing this store may have
+            # compiled it since __init__ — a locked file read is orders of
+            # magnitude cheaper than a recompile.  The whole snapshot was
+            # just parsed anyway, so merge every entry we don't already
+            # hold: each concurrent-host record then costs one file read
+            # total, not one per miss
+            for k, v in self.store.load().items():
+                self._cache.setdefault(k, v)
+            rec = self._cache.get(key)
+        if rec is None:
             rec = analyze_cell(
                 self.arch, self.shape_name, multi_pod=self.multi_pod,
-                bc=bc, chips_per_pod=self.chips_per_pod,
+                bc=bc, chips_per_pod=self.chips_per_pod, fast=fast,
             )
             self._cache[key] = rec
             # merge-on-write under the store's file lock: concurrent tuning
             # runs sharing one cache file union their entries
             self.store.put(key, rec)
+        # a full-fidelity request is byte-identical to a plain call,
+        # meta included; only partial measurements are labeled
+        fid_meta = {"fidelity": float(fidelity)} if fast else {}
         if rec.get("skipped"):
-            return -math.inf, {"skip_reason": rec["skip_reason"]}
+            return -math.inf, dict(fid_meta, skip_reason=rec["skip_reason"])
         mem = rec["memory"]["per_device_B"]
-        meta = {"roofline": rec["roofline"], "mem_per_device_B": mem}
+        meta = dict(fid_meta, roofline=rec["roofline"], mem_per_device_B=mem)
         if mem > self.hbm_bytes:
             return -math.inf, dict(meta, oom=True)
         return float(rec["roofline"]["throughput_tok_s"]), meta
+
+
+#: two-sided 95% Student-t critical values by degrees of freedom (1-30);
+#: beyond 30 the normal 1.96 is within ~2%
+_T95 = (12.706, 4.303, 3.182, 2.776, 2.571, 2.447, 2.365, 2.306, 2.262,
+        2.228, 2.201, 2.179, 2.160, 2.145, 2.131, 2.120, 2.110, 2.101,
+        2.093, 2.086, 2.080, 2.074, 2.069, 2.064, 2.060, 2.056, 2.052,
+        2.048, 2.045, 2.042)
+
+
+def _t95(df: int) -> float:
+    return _T95[df - 1] if 1 <= df <= len(_T95) else 1.96
 
 
 class WallClockEvaluator(Evaluator):
@@ -92,7 +137,38 @@ class WallClockEvaluator(Evaluator):
     ``make_step(point) -> (step_fn, args, examples_per_step)``:
     the builder applies the point's backend parameters (Runtime knobs,
     microbatches, ...) and returns a jittable step plus its inputs.
+
+    Measurement is **variance-adaptive**: steps are timed one at a time
+    until the 95% confidence half-width of the mean step time is within
+    ``rel_halfwidth`` of the mean, or ``max_iters`` measurements were
+    taken — so a stable configuration stops after ``min_iters`` steps
+    while a jittery one keeps measuring up to the cap.  The caps default
+    off the caller's ``iters`` (``min_iters = 2`` — the CI needs two
+    samples — and ``max_iters = 4 * iters``), so a harness sized for cheap
+    measurements stays cheap: ``iters=3`` now usually costs 2 steps and
+    never more than 12.  Note the methodology: per-step variance needs a
+    per-step ``block_until_ready``, so each sample includes one
+    host/device sync that the historical pipelined loop amortized across
+    ``iters`` steps — for sub-millisecond steps this inflates
+    ``step_seconds`` slightly and uniformly.  ``adaptive=False`` restores
+    the historical fixed-``iters`` pipelined loop exactly (use it when
+    numbers must be comparable with pre-adaptive runs).
+
+    Fidelity (``supports_fidelity``): a partial measurement scales the
+    iteration cap by ``fidelity`` and widens the target CI by
+    ``1/fidelity`` — the bottom successive-halving rung is a couple of
+    quick steps with a loose interval, the top rung the full adaptive
+    loop.  ``fidelity=None``/1.0 is byte-identical to a plain call.
+
+    Cost attribution: ``meta["cost_seconds"]`` is the **measurement-only**
+    time (the timing loop), excluding step build, jit lowering/compile,
+    and warmup — a repeat measurement of this configuration pays only the
+    timing loop, so charging compile to the configuration would mislead
+    cost-aware (EI-per-second) acquisition.  The one-time overhead is
+    reported separately as ``meta["build_seconds"]``.
     """
+
+    supports_fidelity = True
 
     def __init__(
         self,
@@ -100,21 +176,77 @@ class WallClockEvaluator(Evaluator):
         *,
         warmup: int = 1,
         iters: int = 3,
+        adaptive: bool = True,
+        rel_halfwidth: float = 0.05,
+        min_iters: Optional[int] = None,
+        max_iters: Optional[int] = None,
     ):
         self.make_step = make_step
         self.warmup = warmup
         self.iters = iters
+        self.adaptive = adaptive
+        self.rel_halfwidth = rel_halfwidth
+        # caps scale with the caller's iters so harnesses sized for cheap
+        # measurements stay cheap; the CI needs >= 2 samples for a
+        # variance estimate, so 2 is the floor either way
+        self.max_iters = max(2, 4 * iters if max_iters is None else max_iters)
+        self.min_iters = min(self.max_iters,
+                             max(2, 2 if min_iters is None else min_iters))
 
-    def __call__(self, point: Dict) -> Tuple[float, dict]:
+    def _measure(self, jitted, args, fidelity: float):
+        """Adaptive timing loop: per-step seconds list."""
+        if not self.adaptive:
+            n = max(1, round(self.iters * fidelity))
+            t0 = time.perf_counter()
+            out = None
+            for _ in range(n):
+                out = jitted(*args)
+            jax.block_until_ready(out)
+            return [(time.perf_counter() - t0) / n] * n
+        cap = max(self.min_iters, math.ceil(self.max_iters * fidelity))
+        target = self.rel_halfwidth / fidelity
+        times = []
+        while len(times) < cap:
+            t0 = time.perf_counter()
+            jax.block_until_ready(jitted(*args))
+            times.append(time.perf_counter() - t0)
+            n = len(times)
+            if n < self.min_iters:
+                continue
+            mean = sum(times) / n
+            var = sum((t - mean) ** 2 for t in times) / (n - 1)
+            halfwidth = _t95(n - 1) * math.sqrt(var / n)
+            if halfwidth <= target * mean:
+                break
+        return times
+
+    def __call__(self, point: Dict,
+                 fidelity: Optional[float] = None) -> Tuple[float, dict]:
+        f = 1.0 if fidelity is None else max(min(float(fidelity), 1.0), 1e-3)
+        t_build0 = time.perf_counter()
         step, args, examples = self.make_step(point)
         jitted = jax.jit(step)
         out = None
         for _ in range(self.warmup):
             out = jitted(*args)
         jax.block_until_ready(out)
-        t0 = time.perf_counter()
-        for _ in range(self.iters):
-            out = jitted(*args)
-        jax.block_until_ready(out)
-        dt = (time.perf_counter() - t0) / self.iters
-        return examples / dt, {"step_seconds": dt}
+        build_seconds = time.perf_counter() - t_build0
+        times = self._measure(jitted, args, f)
+        n = len(times)
+        dt = sum(times) / n
+        mean = dt
+        hw = 0.0
+        if n >= 2:
+            var = sum((t - mean) ** 2 for t in times) / (n - 1)
+            hw = _t95(n - 1) * math.sqrt(var / n)
+        meta = {
+            "step_seconds": dt,
+            "iters": n,
+            "ci_rel_halfwidth": hw / mean if mean > 0 else 0.0,
+            "build_seconds": build_seconds,
+            # measurement-only cost: what a repeat measurement would pay
+            "cost_seconds": float(sum(times)),
+        }
+        if f < 1.0:  # a full-fidelity request is byte-identical to a
+            meta["fidelity"] = f  # plain call, meta included
+        return examples / dt, meta

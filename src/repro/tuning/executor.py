@@ -51,6 +51,27 @@ Backends:
   the GIL (XLA compile/execute, subprocess measurement harnesses, any
   native code) scale; closures and unpicklable objectives all work.
 * ``"process"`` — true CPU parallelism for picklable objectives.
+
+Multi-fidelity support (the successive-halving stack, see
+``repro.tuning.fidelity``):
+
+* ``submit(points, fidelity=f)`` dispatches *partial* measurements —
+  the evaluator's ``fidelity`` protocol (``repro.tuning.objective``)
+  decides what a fraction of a measurement means.  Evaluators that do
+  not opt in are measured at full fidelity and say so in
+  ``meta["fidelity"]``;
+* the memo cache keys low-fidelity results by **(grid key, fidelity)**:
+  a cheap noisy measurement must never be served where a full one was
+  requested (or vice versa), while full-fidelity entries keep the
+  historical key format so existing on-disk stores load unchanged;
+* ``preempt(pending)`` is the scheduler's kill switch for dispatched
+  work that has since been dominated.  ``future.cancel()`` decides the
+  outcome: a still-queued task is cancelled cleanly (never measured,
+  nothing recorded, nothing cached — a later run can still measure it),
+  while a task whose worker already started runs to completion and its
+  result is recorded normally (the measurement is paid for; wasting it
+  would lose information).  Both outcomes leave exactly-once recording
+  intact — nothing is lost, nothing is double-recorded.
 """
 from __future__ import annotations
 
@@ -83,19 +104,36 @@ class EvalResult:
     meta: dict = field(default_factory=dict)
 
 
-def run_objective(objective: Evaluator, point: Dict):
+def run_objective(objective: Evaluator, point: Dict,
+                  fidelity: Optional[float] = None):
     """One isolated evaluation: ``(value, seconds, meta)``.
 
     Module-level so the process backend can pickle it.  A raising
     objective is a failed configuration, not a pool failure.
+
+    ``fidelity=None`` (or 1.0) calls the objective exactly like the
+    historical no-fidelity path — the golden sequential traces depend on
+    this.  A lower fidelity is forwarded iff the evaluator declares
+    ``supports_fidelity``; otherwise the measurement silently upgrades
+    to full fidelity and ``meta["fidelity"]`` reports the upgrade.
     """
+    full = fidelity is None or fidelity >= 1.0
     t0 = time.time()
     try:
-        value, meta = objective(point)
+        if full or not getattr(objective, "supports_fidelity", False):
+            value, meta = objective(point)
+            delivered = 1.0
+        else:
+            value, meta = objective(point, fidelity=float(fidelity))
+            delivered = float(fidelity)
         value = float(value)
         meta = dict(meta)
+        if not full:  # full-fidelity meta stays exactly as the evaluator
+            meta.setdefault("fidelity", delivered)  # made it (golden traces)
     except Exception as e:
         value, meta = -math.inf, {"error": repr(e)}
+        if not full:
+            meta["fidelity"] = float(fidelity)
     seconds = time.time() - t0
     # an evaluator that knows its own measurement cost (a harness timing
     # just the compile, or a benchmark with simulated costs) declares it
@@ -112,6 +150,31 @@ def run_objective(objective: Evaluator, point: Dict):
 def _store_key(key) -> str:
     """Stable string form of a grid key for the on-disk store."""
     return json.dumps(list(key), default=str)
+
+
+_FID_TAG = "__fidelity__"
+
+
+def memo_key(grid_key, fidelity: Optional[float]) -> tuple:
+    """Memo identity of a measurement: the grid key, plus the fidelity
+    when (and only when) it is partial.
+
+    Full-fidelity keys are exactly the historical grid keys, so existing
+    in-memory memos and on-disk stores keep working unchanged; partial
+    measurements get a distinct key so a cheap noisy result is never
+    served where a full measurement was requested."""
+    grid_key = tuple(grid_key)
+    if fidelity is None or fidelity >= 1.0:
+        return grid_key
+    return grid_key + ((_FID_TAG, round(float(fidelity), 9)),)
+
+
+def grid_key_of(key) -> tuple:
+    """Strip the fidelity marker (if any) off a memo key."""
+    if key and isinstance(key[-1], tuple) and key[-1] \
+            and key[-1][0] == _FID_TAG:
+        return tuple(key[:-1])
+    return tuple(key)
 
 
 class MemoCache:
@@ -136,11 +199,32 @@ class MemoCache:
         manager = multiprocessing.Manager()
         return cls(backing=manager.dict(), lock=manager.Lock(), store=store)
 
+    @staticmethod
+    def _stored_fidelity(store_key: str) -> Optional[float]:
+        """Requested fidelity embedded in a persisted key, or None.
+
+        The *requested* fidelity is the lookup identity (an evaluator may
+        deliver a snapped/clamped fidelity in meta, which would never
+        match a repeat request), and it is space-independent, so parsing
+        it off the stored key keeps the re-derive-grid-key-from-point
+        behavior for the rest of the key.
+        """
+        try:
+            parsed = json.loads(store_key)
+        except (json.JSONDecodeError, TypeError):
+            return None
+        if (isinstance(parsed, list) and parsed
+                and isinstance(parsed[-1], list) and parsed[-1]
+                and parsed[-1][0] == _FID_TAG):
+            return float(parsed[-1][1])
+        return None
+
     def load_store(self, space: SearchSpace) -> int:
         """Seed the in-memory memo from the persistent store; return count."""
         n = 0
-        for rec in self._store.load().values():
-            key = space.key(rec["point"])
+        for skey, rec in self._store.load().items():
+            key = memo_key(space.key(rec["point"]),
+                           self._stored_fidelity(skey))
             with self._lock:
                 if key not in self._d:
                     self._d[key] = EvalResult(
@@ -174,19 +258,28 @@ class PendingEval:
     produced a result; past it, ``next_completed`` resolves the pending
     to ``-inf`` with ``meta={"timeout": True}`` (or measures it inline
     if the pool never actually started it).
+
+    ``fidelity``/``rung`` tag partial measurements for the
+    successive-halving scheduler (``None`` = full measurement, outside
+    any rung ladder); ``preempted`` records that the scheduler asked for
+    this evaluation to be killed — whether the kill landed is
+    ``preempt``'s return value, not this flag.
     """
 
     __slots__ = ("point", "key", "index", "submitted_at", "deadline",
-                 "future", "_result")
+                 "future", "fidelity", "rung", "preempted", "_result")
 
     def __init__(self, point, key, index, future=None, result=None,
-                 deadline=None):
+                 deadline=None, fidelity=None, rung=None):
         self.point = point
         self.key = key
         self.index = index
         self.submitted_at = time.time()
         self.deadline = deadline
         self.future = future
+        self.fidelity = fidelity
+        self.rung = rung
+        self.preempted = False
         self._result = result
 
     def done(self) -> bool:
@@ -249,7 +342,9 @@ class EvaluationExecutor:
         return self._pool
 
     # -- completion-driven protocol ------------------------------------------
-    def submit(self, points: Sequence[Dict]) -> List[PendingEval]:
+    def submit(self, points: Sequence[Dict],
+               fidelity: Optional[float] = None,
+               rung: Optional[int] = None) -> List[PendingEval]:
         """Dispatch evaluations without waiting; returns one pending each.
 
         Memo-cache hits come back already completed (zero cost,
@@ -258,45 +353,66 @@ class EvaluationExecutor:
         dispatched pending carries a per-evaluation deadline of
         ``now + timeout`` (when a timeout is set); wall-clock budgeting
         is the *caller's* deadline, passed to ``next_completed``.
+
+        ``fidelity`` requests partial measurements (evaluator fidelity
+        protocol); partial results are memoized under (grid key,
+        fidelity) so they are only ever reused at the same fidelity.
+        ``rung`` is an opaque tag echoed on the pendings for the
+        successive-halving scheduler's bookkeeping.
         """
+        # an objective that cannot vary fidelity always delivers a full
+        # measurement: key (and run) it as one, or identical full results
+        # would fragment across per-fidelity memo keys and re-measure
+        if fidelity is not None \
+                and not getattr(self.objective, "supports_fidelity", False):
+            fidelity = None
         out: List[PendingEval] = []
         for p in points:
-            key = self.space.key(p)
+            key = memo_key(self.space.key(p), fidelity)
             self._seq += 1
             hit = self.cache.get(key)
             if hit is not None:
                 out.append(PendingEval(
-                    dict(p), key, self._seq,
+                    dict(p), key, self._seq, fidelity=fidelity, rung=rung,
                     result=EvalResult(dict(p), hit.value, 0.0,
                                       dict(hit.meta, memoized=True))))
                 continue
             eval_deadline = (time.time() + self.timeout
                              if self.timeout is not None else None)
             stale = self._inflight.get(key)
+            if stale is not None and stale.cancelled():
+                # preempted before it ever started: nothing was measured,
+                # so dispatch a fresh measurement instead of aliasing
+                del self._inflight[key]
+                stale = None
             if stale is not None and stale.done():
                 # a previously abandoned measurement finished after its
                 # driver moved on: harvest it into the cache now
                 self._harvest(key, stale)
                 hit = self.cache.get(key)
                 out.append(PendingEval(
-                    dict(p), key, self._seq,
+                    dict(p), key, self._seq, fidelity=fidelity, rung=rung,
                     result=EvalResult(dict(p), hit.value, 0.0,
                                       dict(hit.meta, memoized=True))))
                 continue
             if stale is not None:
                 out.append(PendingEval(dict(p), key, self._seq, future=stale,
-                                       deadline=eval_deadline))
+                                       deadline=eval_deadline,
+                                       fidelity=fidelity, rung=rung))
                 continue
             if self.backend == "serial":
                 out.append(PendingEval(dict(p), key, self._seq,
-                                       result=self._run_one(p)))
+                                       fidelity=fidelity, rung=rung,
+                                       result=self._run_one(p, fidelity)))
                 r = out[-1].result()
                 self.cache.put(key, r, persist=not r.meta.get("timeout"))
                 continue
-            fut = self._get_pool().submit(run_objective, self.objective, p)
+            fut = self._get_pool().submit(run_objective, self.objective, p,
+                                          fidelity)
             self._inflight[key] = fut
             out.append(PendingEval(dict(p), key, self._seq, future=fut,
-                                   deadline=eval_deadline))
+                                   deadline=eval_deadline,
+                                   fidelity=fidelity, rung=rung))
         return out
 
     def _harvest(self, key, future) -> None:
@@ -304,11 +420,22 @@ class EvaluationExecutor:
         value, secs, meta = future.result()
         if self._inflight.get(key) is future:
             del self._inflight[key]
-        point = dict(zip(self.space.names, key))
+        point = dict(zip(self.space.names, grid_key_of(key)))
         self.cache.put(key, EvalResult(point, value, secs, meta))
 
     def _finalize(self, pending: PendingEval) -> None:
         """Turn a completed future into the pending's EvalResult + memo."""
+        if pending.future.cancelled():
+            # a sibling pending sharing this measurement was preempted
+            # before the worker started: nothing was measured, so this
+            # alias resolves to the same not-recorded placeholder (a later
+            # submit measures the point for real)
+            if self._inflight.get(pending.key) is pending.future:
+                del self._inflight[pending.key]
+            pending.preempted = True
+            pending._result = EvalResult(dict(pending.point), -math.inf,
+                                         0.0, {"preempted": True})
+            return
         value, secs, meta = pending.future.result()
         if self._inflight.get(pending.key) is pending.future:
             del self._inflight[pending.key]
@@ -322,6 +449,43 @@ class EvaluationExecutor:
             pending._result = EvalResult(dict(pending.point), value, 0.0,
                                          dict(meta, memoized=True))
 
+    def preempt(self, pending: PendingEval) -> str:
+        """Best-effort kill of a dispatched evaluation the caller no longer
+        wants (a successive-halving rung outclassed it while in flight).
+
+        Returns one of:
+
+        * ``"cancelled"`` — the task had not started; it is resolved to a
+          ``meta={"preempted": True}`` placeholder that is **not** cached
+          and must not be recorded (the point was never measured; a later
+          submit measures it normally);
+        * ``"running"`` — a worker already started (``future.cancel()``
+          returned False): the measurement runs to completion and its
+          result arrives through ``next_completed`` exactly as usual —
+          it was paid for, so the caller records it normally;
+        * ``"done"`` — the result already exists; the caller must record
+          it (preempting a completed evaluation is a no-op).
+
+        Every path keeps exactly-once accounting: a pending is either
+        resolved to a preempted placeholder (never recorded, never
+        cached) or produces exactly one real result.
+        """
+        if pending.done():
+            return "done"
+        if pending.future is None:  # serial backend resolves at submit
+            return "done"
+        pending.preempted = True
+        if pending.future.cancel():
+            if self._inflight.get(pending.key) is pending.future:
+                del self._inflight[pending.key]
+            pending._result = EvalResult(
+                dict(pending.point), -math.inf, 0.0, {"preempted": True})
+            return "cancelled"
+        # the worker beat us to it (or another pending shares the future):
+        # let the measurement finish and be recorded — killing a running
+        # thread is impossible and wasting a paid-for result loses data
+        return "running"
+
     def _resolve_timeout(self, pending: PendingEval, now: float) -> None:
         """Per-evaluation timeout expiry (never wall-clock expiry)."""
         if self._inflight.get(pending.key) is pending.future:
@@ -330,7 +494,7 @@ class EvaluationExecutor:
             # never started (pool starved by earlier slow evals): this point
             # was not measured at all, so give it its run inline rather than
             # recording a bogus failure
-            pending._result = self._run_one(pending.point)
+            pending._result = self._run_one(pending.point, pending.fidelity)
         else:
             # genuinely running too long: abandon the stuck worker (it is
             # not joined); the pool survives
@@ -483,8 +647,9 @@ class EvaluationExecutor:
                                         dict(src.meta, memoized=True))
         return results
 
-    def _run_one(self, point: Dict) -> EvalResult:
-        value, secs, meta = run_objective(self.objective, point)
+    def _run_one(self, point: Dict,
+                 fidelity: Optional[float] = None) -> EvalResult:
+        value, secs, meta = run_objective(self.objective, point, fidelity)
         if self.timeout is not None and secs > self.timeout:
             value, meta = -math.inf, dict(meta, timeout=True)
         return EvalResult(dict(point), value, secs, meta)

@@ -7,20 +7,55 @@ case in tests and synthetic benchmarks) are adapted with
 ``FunctionEvaluator``; nothing downstream sniffs the return type with
 ``isinstance(value, tuple)`` any more.
 
+Fidelity protocol
+-----------------
+
+An evaluator that can trade measurement cost for measurement quality
+declares ``supports_fidelity = True`` and accepts an optional
+``fidelity`` keyword in ``__call__``: a float in ``(0, 1]`` giving the
+*fraction of a full measurement* to spend.  What the fraction means is
+the evaluator's business — iteration count for a wall-clock harness
+(``WallClockEvaluator``), analysis depth for a compile-and-analyze
+harness (``RooflineEvaluator``), training epochs for a learned model.
+The contract is only that:
+
+* ``fidelity=None`` (or ``1.0``) is a **full measurement**: byte-for-byte
+  the same behavior as calling the evaluator with no fidelity argument
+  at all — the golden sequential traces are pinned against this, so a
+  fidelity-capable evaluator must never let a full-fidelity request
+  take a different code path than a plain call;
+* lower fidelity costs less and may return a noisier/biased value;
+* the evaluator reports the fidelity it actually delivered as
+  ``meta["fidelity"]`` (the executor fills it in otherwise).
+
+Evaluators that do *not* opt in are always measured at full fidelity:
+the executor silently upgrades a low-fidelity request and records
+``meta["fidelity"] = 1.0`` so a fidelity scheduler knows it got (and
+paid for) the real thing.
+
+Cost attribution
+----------------
+
 An evaluator that knows its own measurement cost may declare it as
 ``meta["cost_seconds"]`` (a finite, non-negative number): the executor
 records it as the evaluation's ``cost_seconds`` instead of the measured
 wall-clock time.  This is the signal BO's cost-aware (EI-per-second)
-acquisition trains its cost model on — declare it when the harness can
-separate true measurement cost (the compile) from its own overhead, or
-when costs are simulated and should stay deterministic.
+acquisition trains its cost model on, so the declared number must be
+the *recurring, steady-state* cost of measuring this configuration —
+the timing loop — and must exclude one-time overhead that a repeat
+measurement would not pay again (build, jit/compile, warmup).
+``WallClockEvaluator`` declares exactly that; attribute compile time
+separately (e.g. ``meta["build_seconds"]``) if it is worth recording.
+Declare a cost whenever the harness can separate true measurement cost
+from its own overhead, or when costs are simulated and should stay
+deterministic.
 
 This module is dependency-light on purpose: the executor and the core
 tuner import it without pulling in jax.
 """
 from __future__ import annotations
 
-from typing import Callable, Dict, Tuple
+from typing import Callable, Dict, Optional, Tuple
 
 
 class Evaluator:
@@ -29,11 +64,17 @@ class Evaluator:
     ``value`` is the throughput-like objective (higher is better;
     ``-inf`` marks a failed configuration) and ``meta`` is a
     JSON-serializable dict recorded alongside the evaluation.
+
+    Subclasses that can cheapen a measurement set
+    ``supports_fidelity = True`` and accept the optional ``fidelity``
+    keyword (see the module docstring for the contract).
     """
 
     returns_meta = True
+    supports_fidelity = False
 
-    def __call__(self, point: Dict) -> Tuple[float, dict]:
+    def __call__(self, point: Dict,
+                 fidelity: Optional[float] = None) -> Tuple[float, dict]:
         raise NotImplementedError
 
 
@@ -43,7 +84,8 @@ class FunctionEvaluator(Evaluator):
     def __init__(self, fn: Callable[[Dict], float]):
         self.fn = fn
 
-    def __call__(self, point: Dict) -> Tuple[float, dict]:
+    def __call__(self, point: Dict,
+                 fidelity: Optional[float] = None) -> Tuple[float, dict]:
         value = self.fn(point)
         if isinstance(value, tuple):
             raise TypeError(
@@ -62,14 +104,22 @@ class CountingEvaluator(Evaluator):
     measurements — the quantity a shared memo cache is supposed to drive
     to zero on a repeated run.  Used by the cache-hit acceptance check in
     ``benchmarks/perf_iterations.py`` and the async-loop tests.
+    Forwards ``fidelity`` iff the wrapped evaluator supports it.
     """
 
     def __init__(self, objective):
         self.inner = as_evaluator(objective)
         self.calls = 0
 
-    def __call__(self, point: Dict) -> Tuple[float, dict]:
+    @property
+    def supports_fidelity(self) -> bool:
+        return self.inner.supports_fidelity
+
+    def __call__(self, point: Dict,
+                 fidelity: Optional[float] = None) -> Tuple[float, dict]:
         self.calls += 1
+        if self.inner.supports_fidelity:
+            return self.inner(point, fidelity=fidelity)
         return self.inner(point)
 
 
