@@ -24,11 +24,19 @@ nothing), plus the BO suggestion-overhead gate: after an untimed warmup
 run compiles the bucketed GP shapes, the timed BO runs must trigger
 **zero** new XLA compiles (compile-once surrogate contract; per-ask
 suggestion latency and jit-cache-miss counts land in the emitted JSON).
-``--check`` turns all three properties into exit-code gates, which
+``--remote`` adds the multi-host gate: two localhost ``launch/worker.py``
+daemons serve the same skewed-cost objective and the remote executor
+backend must be throughput-comparable to the thread backend at the same
+parallelism, survive a mid-run worker kill with exactly-once accounting
+(the dead worker's in-flight tasks are reinjected, never recorded as
+config failures), and leave a memo (written by the tuner process — the
+workers share no filesystem) that a thread-backend re-run fully reuses.
+
+``--check`` turns all of these properties into exit-code gates, which
 is what the CI ``bench-smoke`` job runs:
 
     python -m benchmarks.perf_iterations --microbench --async-loop \
-        --check --out BENCH_ci.json
+        --multi-fidelity --remote --check --out BENCH_ci.json
 """
 from __future__ import annotations
 
@@ -141,6 +149,31 @@ def _bench_space():
     return SearchSpace([IntDim("inter_op", 1, 16),
                         IntDim("intra_op", 0, 60, 5),
                         CatDim("build", (1, 2, 3))])
+
+
+# skewed-cost parameters shared by the async and remote comparisons
+_SKEW_FAST_S, _SKEW_SLOW_S = 0.02, 0.16
+
+
+def _skewed_sleep_value(p, fast_s=_SKEW_FAST_S, slow_s=_SKEW_SLOW_S):
+    time.sleep(slow_s if (p["inter_op"] + p["intra_op"]) % 4 == 0 else fast_s)
+    return _bench_value(p)
+
+
+def make_remote_bench_objective():
+    """Factory the worker daemons import (--objective ...:name()): the
+    same skewed-cost objective the local comparisons tune, built ON the
+    worker so nothing but points and results crosses the wire."""
+    from repro.tuning.objective import Evaluator
+
+    class SkewedBenchObjective(Evaluator):
+        def __call__(self, p, fidelity=None):
+            v = _skewed_sleep_value(p)
+            return v, {"cost_seconds":
+                       _SKEW_SLOW_S if (p["inter_op"] + p["intra_op"]) % 4
+                       == 0 else _SKEW_FAST_S}
+
+    return SkewedBenchObjective()
 
 
 def run_microbench(budget: int = 24, parallelism: int = 4,
@@ -433,6 +466,195 @@ def run_multi_fidelity_comparison(budget: int = 20, parallelism: int = 4,
     return rows, ok
 
 
+def run_remote_comparison(budget: int = 16, parallelism: int = 4,
+                          emit=print):
+    """The remote executor backend against two real localhost worker
+    daemons (subprocesses of ``launch/worker.py``), gated three ways:
+
+    * **throughput** — completion-driven scaling over the fleet (2
+      workers x 2 slots = the thread backend's parallelism) must be
+      comparable to the thread backend on the same skewed-cost
+      objective (RPC overhead is per-message milliseconds; the gate
+      allows 1.5x plus a small absolute cushion for connection setup
+      noise on loaded CI runners);
+    * **worker kill mid-run** — one worker is killed while measurements
+      are in flight; its tasks must be reinjected onto the survivor
+      (never recorded as config failures), the run must still complete
+      the full budget, and accounting must be exactly-once: nothing
+      lost, nothing double-recorded, every recorded value bit-equal to
+      the deterministic objective;
+    * **shared memo across backends** — the memo written by the remote
+      run (by the *tuner* process: workers share no filesystem with the
+      store) must drive a second identical run on the local thread
+      backend to zero re-evaluations.
+
+    Returns ``(rows, ok)``.
+    """
+    import os
+    import socket
+    import subprocess
+    import sys
+    import tempfile
+    import threading
+
+    from repro.core import Tuner, TunerConfig
+    from repro.tuning.objective import CountingEvaluator
+
+    def objective(p):  # local twin of the worker-side objective
+        return _skewed_sleep_value(p)
+
+    make_space = _bench_space
+    root = pathlib.Path(__file__).resolve().parents[1]
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [str(root / "src"), str(root)]
+        + [p for p in env.get("PYTHONPATH", "").split(os.pathsep) if p])
+
+    def free_port():
+        s = socket.socket()
+        s.bind(("127.0.0.1", 0))
+        port = s.getsockname()[1]
+        s.close()
+        return port
+
+    def spawn_worker(port):
+        return subprocess.Popen(
+            [sys.executable, "-m", "repro.launch.worker",
+             "--host", "127.0.0.1", "--port", str(port),
+             "--slots", "2", "--heartbeat", "0.5", "--objective",
+             "benchmarks.perf_iterations:make_remote_bench_objective()"],
+            env=env, cwd=str(root),
+            stdout=subprocess.DEVNULL, stderr=subprocess.DEVNULL)
+
+    ports = [free_port() for _ in range(3)]
+    workers = [spawn_worker(p) for p in ports]  # third = the kill victim
+    rows = []
+    point_key = ("inter_op", "intra_op", "build")
+    try:
+        with tempfile.TemporaryDirectory() as d:
+            memo_clean = str(pathlib.Path(d) / "memo_remote.json")
+            memo_kill = str(pathlib.Path(d) / "memo_kill.json")
+
+            # -- thread-backend reference at the same parallelism ---------
+            t = Tuner(objective, make_space(),
+                      TunerConfig(algorithm="random", budget=budget, seed=0,
+                                  verbose=False, parallelism=parallelism))
+            t0 = time.perf_counter()
+            h_thread = t.run()
+            thread_s = time.perf_counter() - t0
+            t.close()
+
+            # -- clean remote runs: 2 workers x 2 slots.  Timed twice
+            # (fresh memo each, so nothing is a cache hit) and gated on
+            # the best: with 4+ processes on a small CI runner a single
+            # timing can eat an arbitrary scheduling stall, and the gate
+            # asks whether the backend CAN match the thread backend, not
+            # whether the runner was quiet.
+            remote_timings = []
+            for memo_path in (memo_clean,
+                              str(pathlib.Path(d) / "memo_remote2.json")):
+                t = Tuner(objective, make_space(),
+                          TunerConfig(algorithm="random", budget=budget,
+                                      seed=0, verbose=False,
+                                      memo_cache_path=memo_path,
+                                      workers=[f"127.0.0.1:{ports[0]}",
+                                               f"127.0.0.1:{ports[1]}"]))
+                fleet_par = t.executor.parallelism
+                t0 = time.perf_counter()
+                h_remote = t.run()
+                remote_timings.append(time.perf_counter() - t0)
+                t.close()
+            remote_s = min(remote_timings)
+            ratio = remote_s / max(thread_s, 1e-9)
+            remote_exact = all(e.value == _bench_value(e.point)
+                               for e in h_remote.evals)
+            rows.append({"mode": "remote_vs_thread", "algo": "random",
+                         "parallelism": parallelism,
+                         "fleet_parallelism": fleet_par,
+                         "thread_seconds": thread_s,
+                         "remote_seconds": remote_s,
+                         "remote_timings": [round(s, 4)
+                                            for s in remote_timings],
+                         "ratio": round(ratio, 4),
+                         "n_evals": len(h_remote),
+                         "values_exact": remote_exact,
+                         "best_thread": h_thread.best().value,
+                         "best_remote": h_remote.best().value})
+            emit(f"remotebench,random,{parallelism},thread={thread_s:.3f},"
+                 f"remote={remote_s:.3f},ratio={ratio:.2f}")
+
+            # -- worker kill mid-run: reinjection + exactly-once ----------
+            t = Tuner(objective, make_space(),
+                      TunerConfig(algorithm="random", budget=budget, seed=0,
+                                  verbose=False, memo_cache_path=memo_kill,
+                                  workers=[f"127.0.0.1:{ports[0]}",
+                                           f"127.0.0.1:{ports[2]}"]))
+            # kill once the memo proves the run is underway (>= 2 results
+            # flushed): deterministic mid-run, unlike a wall-clock timer
+            def kill_when_underway():
+                give_up = time.time() + 30
+                while time.time() < give_up:
+                    try:
+                        if len(json.loads(
+                                pathlib.Path(memo_kill).read_text())) >= 2:
+                            break
+                    except (OSError, json.JSONDecodeError):
+                        pass
+                    time.sleep(0.01)
+                workers[2].kill()
+
+            killer = threading.Thread(target=kill_when_underway, daemon=True)
+            killer.start()
+            t0 = time.perf_counter()
+            h_kill = t.run()
+            kill_run_s = time.perf_counter() - t0
+            t.close()
+            killer.join(timeout=35)
+            measured = [e for e in h_kill.evals
+                        if not e.meta.get("memoized")]
+            keys = [tuple(e.point[k] for k in point_key) for e in measured]
+            kill_lost = budget - len(h_kill)
+            kill_double = len(keys) - len(set(keys))
+            kill_exact = all(e.value == _bench_value(e.point)
+                             for e in h_kill.evals)
+            worker_was_killed = workers[2].poll() is not None
+            rows.append({"mode": "remote_worker_kill",
+                         "kill_run_seconds": round(kill_run_s, 3),
+                         "worker_was_killed": worker_was_killed,
+                         "n_evals": len(h_kill), "lost": kill_lost,
+                         "double_recorded": kill_double,
+                         "values_exact": kill_exact})
+            emit(f"remotekill,killed={worker_was_killed},"
+                 f"n={len(h_kill)},lost={kill_lost},double={kill_double},"
+                 f"exact={kill_exact}")
+
+            # -- memo written by the tuner host, honored across backends --
+            counting = CountingEvaluator(objective)
+            t = Tuner(counting, make_space(),
+                      TunerConfig(algorithm="random", budget=budget, seed=0,
+                                  verbose=False, parallelism=parallelism,
+                                  memo_cache_path=memo_clean))
+            h_memo = t.run()
+            t.close()
+            rows.append({"mode": "remote_memo_cross_backend",
+                         "second_run_re_evals": counting.calls,
+                         "n_evals": len(h_memo)})
+            emit(f"remotememo,second_run_re_evals={counting.calls}")
+
+        ok = (remote_s <= thread_s * 1.5 + 0.25
+              and remote_exact
+              and worker_was_killed  # else the kill gate proved nothing
+              and kill_lost == 0 and kill_double == 0 and kill_exact
+              and counting.calls == 0)
+        return rows, ok
+    finally:
+        for w in workers:
+            if w.poll() is None:
+                w.kill()
+        for w in workers:
+            w.wait(timeout=10)
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--cell", choices=sorted(CELLS))
@@ -450,18 +672,26 @@ def main(argv=None):
                          "max(--budget, 20) full-measurement equivalents: "
                          "smaller budgets leave too few rung completions "
                          "for a stable gate)")
+    ap.add_argument("--remote", action="store_true",
+                    help="add the remote-executor gate: two localhost "
+                         "worker daemons vs the thread backend at the same "
+                         "parallelism, a mid-run worker kill (reinjection + "
+                         "exactly-once accounting), and the memo shared "
+                         "across backends")
     ap.add_argument("--check", action="store_true",
                     help="exit nonzero if the async loop does not beat the "
                          "batch loop, the memo cache re-evaluates, BO "
-                         "recompiles after warmup, or successive halving "
-                         "misses its time-to-target / accounting gates "
-                         "(CI gate)")
+                         "recompiles after warmup, successive halving "
+                         "misses its time-to-target / accounting gates, or "
+                         "the remote backend misses its throughput / "
+                         "exactly-once / shared-memo gates (CI gate)")
     ap.add_argument("--parallelism", type=int, default=4)
     ap.add_argument("--budget", type=int, default=24)
     args = ap.parse_args(argv)
     ok = True
     failures = []
-    if args.microbench or args.async_loop or args.multi_fidelity:
+    if args.microbench or args.async_loop or args.multi_fidelity \
+            or args.remote:
         rows = []
         if args.microbench:
             rows += run_microbench(budget=args.budget,
@@ -489,11 +719,22 @@ def main(argv=None):
                     "multi-fidelity: successive halving did not reach within "
                     "1% of the full-fidelity best in <= 0.5x its wall clock, "
                     "or preemption lost/double-recorded a result")
+        if args.remote:
+            remote_rows, ok_remote = run_remote_comparison(
+                budget=min(args.budget, 16), parallelism=args.parallelism)
+            rows += remote_rows
+            if not ok_remote:
+                failures.append(
+                    "remote: the two-worker fleet was not throughput-"
+                    "comparable to the thread backend, a mid-run worker "
+                    "kill lost or double-recorded a result, or the memo "
+                    "written by the remote run was not honored by a "
+                    "thread-backend re-run")
         ok = not failures
     else:
         if not args.cell:
-            ap.error("--cell is required unless --microbench, --async-loop "
-                     "or --multi-fidelity is given")
+            ap.error("--cell is required unless --microbench, --async-loop, "
+                     "--multi-fidelity or --remote is given")
         rows = run(args.cell, multi_pod=args.multi_pod)
     if args.out:
         p = pathlib.Path(args.out)

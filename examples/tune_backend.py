@@ -28,11 +28,18 @@ How it runs (completion-driven ask/tell):
   file-locked JSON stores, so re-running this script re-evaluates
   nothing and concurrent runs merge rather than clobber;
 * ``--parallelism 1`` (default) is the paper-faithful sequential loop,
-  bit-for-bit identical to the pre-batching harness.
+  bit-for-bit identical to the pre-batching harness;
+* multi-host: start a measurement worker per host with
+  ``python examples/tune_backend.py --serve-worker --worker-port 9123``
+  (same --arch/--shape so both ends agree on the objective), then drive
+  the fleet with ``--backend remote --workers hostA:9123,hostB:9123`` —
+  the engine, history, and memo cache stay on the tuner host, so the
+  workers need no shared filesystem, and a worker dying mid-run just
+  hands its in-flight compiles to the survivors.
 
 `python -m repro.launch.tune` is the full 50-iteration driver used for
 EXPERIMENTS.md §Perf; it exposes the same knobs plus --eval-timeout and
---executor-backend.
+the serial/thread/process backend switch.
 """
 import argparse
 
@@ -61,6 +68,19 @@ def main():
                     help="successive-halving rungs: cheap fast-analysis "
                          "screening, top-1/eta promoted to full depth "
                          "(--budget counts full-measurement equivalents)")
+    ap.add_argument("--backend", default=None,
+                    choices=["serial", "thread", "process", "remote"],
+                    help="evaluation backend (remote farms compiles to "
+                         "--workers daemons)")
+    ap.add_argument("--workers", default=None,
+                    help="comma-separated host:port measurement workers "
+                         "(implies --backend remote)")
+    ap.add_argument("--serve-worker", action="store_true",
+                    help="serve this cell's objective as a measurement "
+                         "worker instead of tuning (--parallelism = "
+                         "concurrent-measurement slots)")
+    ap.add_argument("--worker-port", type=int, default=9123,
+                    help="--serve-worker: port to listen on")
     args = ap.parse_args()
     argv = [
         "--arch", args.arch, "--shape", args.shape, "--algo", args.algo,
@@ -76,6 +96,12 @@ def main():
         argv += ["--cost-aware"]
     if args.multi_fidelity:
         argv += ["--multi-fidelity"]
+    if args.backend is not None:
+        argv += ["--backend", args.backend]
+    if args.workers is not None:
+        argv += ["--workers", args.workers]
+    if args.serve_worker:
+        argv += ["--serve-worker", "--worker-port", str(args.worker_port)]
     tune_main(argv)
 
 

@@ -34,6 +34,15 @@ store (atomic writes + cross-process file locking), so a re-run or a
 resumed run of the same tuning job re-evaluates nothing and multiple
 hosts sharing a filesystem reuse each other's measurements.
 
+``workers=["host:port", ...]`` (or ``executor_backend="remote"``) farms
+the measurements to ``launch/worker.py`` daemons over the RPC protocol
+in ``repro.tuning.remote``: the completion-driven loop sizes its
+in-flight window to the fleet's registered slot total, a worker death
+reinjects its in-flight measurements onto survivors (never recorded as
+config failures), and every result still lands in the same memo cache —
+written by *this* process, so the worker fleet needs no shared
+filesystem.
+
 ``multi_fidelity=True`` layers a successive-halving rung scheduler
 (ASHA; see ``repro.tuning.fidelity``) over the async loop: fresh
 candidates are screened with cheap partial measurements, survivors are
@@ -90,7 +99,10 @@ class TunerConfig:
     # -- parallel evaluation -------------------------------------------------
     parallelism: int = 1  # worker-pool width; 1 == historical sequential loop
     batch_size: Optional[int] = None  # batch loop: points per ask
-    executor_backend: Optional[str] = None  # serial|thread|process (auto)
+    executor_backend: Optional[str] = None  # serial|thread|process|remote
+    # (auto: serial at parallelism=1, thread above, remote when workers set)
+    workers: Optional[List[str]] = None  # remote backend: host:port worker
+    # daemons (launch/worker.py); parallelism becomes the fleet's slot total
     eval_timeout: Optional[float] = None  # seconds per evaluation; -inf past it
     wall_clock_budget: Optional[float] = None  # secs; unfinished work is
     # abandoned at the deadline (forces a pool backend unless overridden)
@@ -150,6 +162,8 @@ class Tuner:
             space, seed=config.seed, **engine_kwargs
         )
         backend = config.executor_backend
+        if backend is None and config.workers:
+            backend = "remote"
         if backend is None and config.wall_clock_budget is not None:
             # the serial backend cannot abandon a running evaluation, so a
             # wall-clock budget needs a pool even at parallelism=1
@@ -160,6 +174,7 @@ class Tuner:
             backend=backend,
             timeout=config.eval_timeout,
             cache_path=config.memo_cache_path,
+            workers=config.workers,
         )
         self.history = History(space)
         self.rung_scheduler = None  # set by the multi-fidelity loop
@@ -232,7 +247,9 @@ class Tuner:
                     self._wall_clock_exhausted(wall_clock)
                     break
                 # refill: one ask per free worker slot, the moment it frees
-                capacity = self.config.parallelism - len(outstanding)
+                # (executor.parallelism, not config: the remote backend's
+                # capacity is the fleet's registered slot total)
+                capacity = self.executor.parallelism - len(outstanding)
                 want = min(capacity,
                            budget - len(self.history) - len(outstanding))
                 asked_any = False
@@ -354,7 +371,7 @@ class Tuner:
                 if deadline is not None and time.time() >= deadline:
                     self._wall_clock_exhausted(wall_clock)
                     break
-                capacity = cfg.parallelism - len(outstanding)
+                capacity = self.executor.parallelism - len(outstanding)
                 submitted_any = False
                 # promotions outrank fresh probes for free workers: a
                 # survivor's next rung is the highest-value measurement
@@ -449,7 +466,7 @@ class Tuner:
         return results
 
     def _run_batch(self, budget: int, wall_clock: Optional[float]) -> History:
-        batch_size = self.config.batch_size or max(1, self.config.parallelism)
+        batch_size = self.config.batch_size or max(1, self.executor.parallelism)
         t_start = time.time()
         deadline = t_start + wall_clock if wall_clock is not None else None
         while len(self.history) < budget:

@@ -37,6 +37,28 @@ promoted to the full analysis depth, and in-flight promotions that have
 been outclassed are preempted; ``--budget`` then counts full-measurement
 equivalents.  The roofline objective has exactly two analysis depths, so
 the default ladder is the matching 2-rung one (``--mf-min-fidelity``).
+
+Multi-host tuning splits this driver across machines: run a measurement
+worker per host and point one tuner at the fleet.
+
+    # each measurement host serves the same (arch x shape) objective
+    PYTHONPATH=src python -m repro.launch.tune --arch qwen2-0.5b \
+        --serve-worker --worker-port 9123 --parallelism 2
+
+    # the tuner host drives the fleet (engine, history, and memo cache
+    # stay here; workers need no shared filesystem)
+    PYTHONPATH=src python -m repro.launch.tune --arch qwen2-0.5b \
+        --backend remote --workers hostA:9123,hostB:9123 \
+        --memo-cache artifacts/memo.json --budget 50
+
+``--workers`` implies ``--backend remote``; effective parallelism is
+the fleet's slot total (``--parallelism`` on the *worker* side sets how
+many concurrent compiles that host runs).  A worker dying mid-run is
+survived: its in-flight measurements are reinjected onto surviving
+workers, never recorded as failed configurations.  The wire protocol
+(length-prefixed JSON over TCP: register, heartbeat, task, result) is
+documented in ``repro.tuning.remote``; any objective can be served with
+the generic ``python -m repro.launch.worker`` daemon.
 """
 import argparse
 import math
@@ -62,10 +84,27 @@ def main(argv=None):
                     help="JSON cache of compiled evaluations (shared across algos)")
     ap.add_argument("--parallelism", type=int, default=1,
                     help="evaluation worker-pool width (1 = sequential loop)")
-    ap.add_argument("--executor-backend", default=None,
-                    choices=["serial", "thread", "process"],
+    ap.add_argument("--backend", "--executor-backend",
+                    dest="executor_backend", default=None,
+                    choices=["serial", "thread", "process", "remote"],
                     help="worker-pool backend (default: serial for "
-                         "parallelism 1, else thread)")
+                         "parallelism 1, thread above, remote when "
+                         "--workers is given)")
+    ap.add_argument("--workers", default=None,
+                    help="comma-separated host:port measurement workers "
+                         "(launch/worker.py daemons or --serve-worker "
+                         "instances; implies --backend remote; effective "
+                         "parallelism = the fleet's slot total)")
+    ap.add_argument("--serve-worker", action="store_true",
+                    help="run as a measurement worker instead of a tuner: "
+                         "serve this (arch x shape) roofline objective to a "
+                         "remote-backend tuner; --parallelism sets the "
+                         "concurrent-measurement slots")
+    ap.add_argument("--worker-host", default="0.0.0.0",
+                    help="--serve-worker: interface to listen on")
+    ap.add_argument("--worker-port", type=int, default=9123,
+                    help="--serve-worker: port to listen on (0 = ephemeral, "
+                         "printed at startup)")
     ap.add_argument("--eval-timeout", type=float, default=None,
                     help="seconds per evaluation before it scores -inf")
     ap.add_argument("--wall-clock", type=float, default=None,
@@ -105,6 +144,10 @@ def main(argv=None):
     args = ap.parse_args(argv)
     if args.cost_aware and args.algo != "bo":
         ap.error("--cost-aware requires --algo bo")
+    workers = ([w.strip() for w in args.workers.split(",") if w.strip()]
+               if args.workers else None)
+    if args.executor_backend == "remote" and not workers:
+        ap.error("--backend remote needs --workers host:port,...")
 
     cfg = get_config(args.arch)
     shape_kind = "train" if args.shape.startswith("train") else "serve"
@@ -114,6 +157,24 @@ def main(argv=None):
     evaluator = RooflineEvaluator(
         args.arch, args.shape, multi_pod=args.multi_pod, cache_path=args.cache
     )
+    if args.serve_worker:
+        # worker mode: serve this cell's objective to a remote tuner.  The
+        # evaluator (and its compile cache) lives here; only points and
+        # results cross the wire, and the tuner host persists the memo.
+        from repro.tuning.remote import WorkerServer
+
+        server = WorkerServer(evaluator, host=args.worker_host,
+                              port=args.worker_port,
+                              slots=max(1, args.parallelism))
+        print(f"[tune] serving measurement worker for ({args.arch} x "
+              f"{args.shape}) on {server.host}:{server.port} "
+              f"(slots={server.slots}); point the tuner at it with "
+              f"--backend remote --workers <host>:{server.port}")
+        try:
+            server.serve_forever()
+        except KeyboardInterrupt:
+            print("[tune] worker interrupted; shutting down")
+        return None
     ckpt = (args.out + ".ckpt") if args.out else None
     tuner = Tuner(
         evaluator, space,
@@ -129,7 +190,8 @@ def main(argv=None):
                     multi_fidelity=args.multi_fidelity,
                     mf_eta=args.mf_eta,
                     mf_min_fidelity=args.mf_min_fidelity,
-                    mf_preempt=not args.no_mf_preempt),
+                    mf_preempt=not args.no_mf_preempt,
+                    workers=workers),
     )
     history = tuner.run()
     tuner.close()

@@ -1,0 +1,89 @@
+"""Measurement-worker daemon for the remote executor backend.
+
+Run one of these per measurement host, point it at the objective it
+should serve, and hand the tuner the ``host:port`` list:
+
+    # on each measurement host
+    PYTHONPATH=src python -m repro.launch.worker --port 9123 --slots 2 \
+        --objective benchmarks.perf_iterations:make_remote_bench_objective()
+
+    # on the tuner host
+    PYTHONPATH=src python -m repro.launch.tune --arch qwen2-0.5b \
+        --backend remote --workers hostA:9123,hostB:9123 ...
+
+(For the roofline objective specifically, ``launch/tune.py
+--serve-worker`` is the turnkey spelling: it builds the same
+``RooflineEvaluator`` the driver would and serves it, so both ends are
+guaranteed to agree on the objective.)
+
+``--objective module:attr`` names the objective; append ``()`` to call
+it as a zero-argument factory (the usual shape — a factory builds the
+evaluator *on the worker*, so heavyweight state like compile caches
+never crosses the wire).  The resolved object may be an
+``Evaluator``/``(value, meta)`` callable or a plain scalar objective;
+``as_evaluator`` normalizes it exactly as the local backends do.
+
+The daemon registers with the connecting tuner, heartbeats every
+``--heartbeat`` seconds, pulls ``(point, fidelity)`` tasks into a
+``--slots``-wide measurement pool, and streams results back in
+completion order.  It never touches the memo cache — results are
+persisted by the tuner host, so workers need no shared filesystem.  A
+tuner disconnect ends the session and the daemon goes back to
+accepting, so a fleet survives tuner restarts.
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import os
+
+from repro.tuning.remote import DEFAULT_HEARTBEAT_S, WorkerServer
+
+
+def resolve_objective(spec: str):
+    """``module:attr`` or ``module:factory()`` -> the objective object."""
+    mod_name, sep, attr = spec.partition(":")
+    if not sep or not attr:
+        raise ValueError(
+            f"objective spec {spec!r} is not module:attr (append () to "
+            "call a zero-arg factory, e.g. pkg.mod:make_objective())")
+    call = attr.endswith("()")
+    if call:
+        attr = attr[:-2]
+    obj = getattr(importlib.import_module(mod_name), attr)
+    return obj() if call else obj
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(
+        description="Serve measurements to a remote-backend tuner "
+                    "(see repro.tuning.remote for the wire protocol).")
+    ap.add_argument("--objective", required=True,
+                    help="module:attr naming the objective to serve; "
+                         "append () to call it as a zero-arg factory")
+    ap.add_argument("--host", default="0.0.0.0",
+                    help="interface to listen on (default: all)")
+    ap.add_argument("--port", type=int, default=9123,
+                    help="port to listen on (0 = ephemeral, printed)")
+    ap.add_argument("--slots", type=int, default=1,
+                    help="concurrent measurements this host runs "
+                         "(fleet parallelism = sum of slots)")
+    ap.add_argument("--heartbeat", type=float, default=DEFAULT_HEARTBEAT_S,
+                    help="seconds between heartbeats (the tuner declares "
+                         "this worker dead after 3 missed ones)")
+    args = ap.parse_args(argv)
+
+    server = WorkerServer(resolve_objective(args.objective),
+                          host=args.host, port=args.port,
+                          slots=args.slots, heartbeat_s=args.heartbeat)
+    print(f"[worker] pid={os.getpid()} serving {args.objective!r} on "
+          f"{server.host}:{server.port} (slots={server.slots})", flush=True)
+    try:
+        server.serve_forever()
+    except KeyboardInterrupt:
+        print("[worker] interrupted; shutting down")
+    return server
+
+
+if __name__ == "__main__":
+    main()

@@ -15,8 +15,13 @@ storage layer behind both the executor's :class:`MemoCache` and the
   **cross-process file locking** (POSIX ``flock`` on a ``.lock``
   sidecar), so concurrent writers on one host — or on several hosts
   sharing a POSIX filesystem with coherent locks — merge their entries
-  instead of clobbering each other.  Every ``put`` is read-merge-write
-  under the lock: last-writer-wins per key, union across keys.
+  instead of clobbering each other.  Every ``put``/``put_many`` is one
+  read-merge-write under the lock: last-writer-wins per key, union
+  across keys (batch the puts — the executor's memo cache flushes once
+  per completion drain).  Records are validated JSON-serializable at
+  ``put`` time (fail loudly beats a silently corrupting ``default=str``
+  round trip), and a corrupt/torn cache file is quarantined to a
+  ``.corrupt`` sidecar with a warning instead of killing the run.
 * :class:`NullCacheStore` — the no-op store used when persistence is
   disabled; keeps callers free of ``if store is not None`` branches.
 
@@ -30,12 +35,68 @@ import contextlib
 import json
 import os
 import pathlib
+import warnings
 from typing import Any, Dict
 
 try:  # POSIX file locking; degrade to lockless on platforms without it
     import fcntl
 except ImportError:  # pragma: no cover - non-POSIX
     fcntl = None
+
+
+def _round_trip_violation(x: Any, path: str = "record"):
+    """First node of ``x`` that would NOT survive a JSON round trip
+    *equal* (as a description string), or ``None`` if the whole record
+    is canonical JSON.
+
+    Stricter than "json.dumps succeeds": a tuple dumps fine but reloads
+    as a list, and a non-string dict key reloads stringified — both are
+    silent corruption from a cache's point of view, so only the
+    canonical JSON types (str/bool/int/float/None, lists of them, and
+    string-keyed dicts of them) pass.  This walk is also cheaper than a
+    serialization, so validating at ``put`` time costs no extra dumps.
+    """
+    if x is None or isinstance(x, (str, bool, int, float)):
+        return None
+    if isinstance(x, list):
+        for i, v in enumerate(x):
+            bad = _round_trip_violation(v, f"{path}[{i}]")
+            if bad:
+                return bad
+        return None
+    if isinstance(x, dict):
+        for k, v in x.items():
+            if not isinstance(k, str):
+                return (f"{path} has non-string key {k!r} "
+                        "(reloads stringified)")
+            bad = _round_trip_violation(v, f"{path}[{k!r}]")
+            if bad:
+                return bad
+        return None
+    return (f"{path} is a {type(x).__name__} (tuples reload as lists; "
+            "arbitrary objects do not reload at all)")
+
+
+def ensure_serializable(key: str, record: Any) -> None:
+    """Reject records that would not survive the JSON round trip equal.
+
+    The store used to serialize with ``default=str``, which silently
+    stringified anything JSON could not represent — the record *looked*
+    persisted but reloaded corrupted (a numpy scalar came back as
+    ``"3.0"``, an object as its repr).  A cache whose hits differ from
+    what was stored is worse than no cache, so non-round-trippable
+    records now fail loudly at ``put`` time, naming the key and the
+    offending field.
+    """
+    try:
+        bad = _round_trip_violation(record)
+    except RecursionError:
+        bad = "record is self-referential"
+    if bad:
+        raise TypeError(
+            f"cache record for key {key!r} would not survive the JSON "
+            f"round trip: {bad}; refusing to persist it — a default=str "
+            "fallback would silently corrupt the record on reload")
 
 
 class CacheStore:
@@ -91,11 +152,31 @@ class JsonCacheStore(CacheStore):
         text = self.path.read_text()
         if not text.strip():
             return {}
-        return json.loads(text)
+        try:
+            return json.loads(text)
+        except json.JSONDecodeError as e:
+            # a torn/corrupt file (host died mid-write on a filesystem
+            # where rename is not atomic, disk full, truncation) must not
+            # kill the whole tuning run: quarantine it for post-mortem and
+            # continue with an empty store — the measurements re-accrue
+            quarantine = self.path.with_name(self.path.name + ".corrupt")
+            try:
+                os.replace(self.path, quarantine)
+                where = f"quarantined to {quarantine}"
+            except OSError:
+                where = "and could not be quarantined"
+            warnings.warn(
+                f"cache file {self.path} is corrupt ({e}); {where}; "
+                "continuing with an empty store", RuntimeWarning,
+                stacklevel=3)
+            return {}
 
     def _write(self, data: Dict[str, Any]) -> None:
         tmp = self.path.with_name(self.path.name + ".tmp")
-        tmp.write_text(json.dumps(data, default=str))
+        # no default= fallback: put_many validated every record, and a
+        # serializer that silently stringifies is how corrupt caches are
+        # born (see ensure_serializable)
+        tmp.write_text(json.dumps(data, allow_nan=True))
         os.replace(tmp, self.path)  # atomic: readers never see a torn file
 
     def load(self) -> Dict[str, Any]:
@@ -106,8 +187,17 @@ class JsonCacheStore(CacheStore):
         self.put_many({key: record})
 
     def put_many(self, records: Dict[str, Any]) -> None:
+        """One read-merge-write for the whole batch.
+
+        This is the store's flush unit: callers with many pending puts
+        (the executor's memo cache batches one flush per completion
+        drain) pay one lock + one file traversal for all of them,
+        instead of a full read-merge-write per key.
+        """
         if not records:
             return
+        for k, rec in records.items():
+            ensure_serializable(k, rec)
         with self._locked():
             data = self._read()
             data.update(records)

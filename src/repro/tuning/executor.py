@@ -24,7 +24,8 @@ Shared semantics across both protocols:
   stuck worker is abandoned, not joined, so other evaluations keep
   flowing.  The clock starts at dispatch; a task still queued when its
   wait expires is cancelled and measured inline instead of being falsely
-  recorded as a failure;
+  recorded as a failure (remote backend: re-dispatched to the fleet with
+  a fresh deadline instead — the workers own the real objective there);
 * **wall-clock deadline** — ``next_completed``/``evaluate`` accept an
   absolute ``deadline`` (how the tuner bounds in-flight work against its
   ``wall_clock_budget``).  A deadline expiry is a *budget artifact of
@@ -51,6 +52,15 @@ Backends:
   the GIL (XLA compile/execute, subprocess measurement harnesses, any
   native code) scale; closures and unpicklable objectives all work.
 * ``"process"`` — true CPU parallelism for picklable objectives.
+* ``"remote"`` — measurements farmed to ``launch/worker.py`` daemons on
+  other hosts over the length-prefixed-JSON RPC protocol
+  (``repro.tuning.remote``); pass ``workers=["host:port", ...]``.
+  Effective ``parallelism`` is the fleet's total slot count, a worker
+  death reinjects its in-flight tasks (never recorded as config
+  failures), preempting a task a worker already started keeps the
+  let-it-finish semantics of a started pool task, and results are
+  cached *by the tuner process* — workers never need the shared
+  filesystem the cache store lives on.
 
 Multi-fidelity support (the successive-halving stack, see
 ``repro.tuning.fidelity``):
@@ -87,13 +97,24 @@ from concurrent.futures import (
 )
 from concurrent.futures import TimeoutError as FutureTimeoutError
 from dataclasses import dataclass, field
-from typing import Dict, Iterator, List, Optional, Sequence
+from typing import TYPE_CHECKING, Dict, Iterator, List, Optional, Sequence
 
-from repro.core.space import SearchSpace
-from repro.tuning.cache import CacheStore, open_store
+if TYPE_CHECKING:  # annotation-only: a runtime import would pull in all of
+    # repro.core (and with it jax) — and create an import cycle that
+    # breaks whichever of executor/tuner is imported first.  Measurement
+    # workers import this module for run_objective and must stay light.
+    from repro.core.space import SearchSpace
+
+from repro.tuning.cache import (
+    CacheStore,
+    NullCacheStore,
+    ensure_serializable,
+    open_store,
+)
 from repro.tuning.objective import Evaluator, as_evaluator
+from repro.tuning.remote import RemoteWorkerPool
 
-BACKENDS = ("serial", "thread", "process")
+BACKENDS = ("serial", "thread", "process", "remote")
 
 
 @dataclass
@@ -185,19 +206,36 @@ class MemoCache:
     stored as ``{"point", "value", "cost_seconds", "meta"}`` so a
     different process can re-derive the grid key from the point under
     its own ``SearchSpace``.
+
+    Persistence granularity: with ``autoflush=True`` (the default, and
+    the historical behavior) every ``put`` is its own store write.  The
+    executor constructs its caches with ``autoflush=False`` and calls
+    :meth:`flush` once per completion drain instead, so N completions
+    cost one read-merge-write of the store file rather than N — records
+    are still *validated* serializable at ``put`` time (the error must
+    name the evaluation that produced it, not surface at some later
+    flush).  ``flushes`` counts actual store writes for tests and
+    observability.
     """
 
-    def __init__(self, backing=None, lock=None, store: Optional[CacheStore] = None):
+    def __init__(self, backing=None, lock=None,
+                 store: Optional[CacheStore] = None, autoflush: bool = True):
         self._d = {} if backing is None else backing
         self._lock = lock if lock is not None else threading.Lock()
         self._store = store if store is not None else open_store(None)
+        self._persistent = not isinstance(self._store, NullCacheStore)
+        self._autoflush = autoflush
+        self._dirty: Dict[str, dict] = {}
+        self.flushes = 0
 
     @classmethod
-    def process_safe(cls, store: Optional[CacheStore] = None) -> "MemoCache":
+    def process_safe(cls, store: Optional[CacheStore] = None,
+                     autoflush: bool = True) -> "MemoCache":
         import multiprocessing
 
         manager = multiprocessing.Manager()
-        return cls(backing=manager.dict(), lock=manager.Lock(), store=store)
+        return cls(backing=manager.dict(), lock=manager.Lock(), store=store,
+                   autoflush=autoflush)
 
     @staticmethod
     def _stored_fidelity(store_key: str) -> Optional[float]:
@@ -241,11 +279,30 @@ class MemoCache:
     def put(self, key, result: EvalResult, persist: bool = True) -> None:
         with self._lock:
             self._d[key] = result
-        if persist:
-            self._store.put(_store_key(key), {
-                "point": result.point, "value": result.value,
-                "cost_seconds": result.cost_seconds, "meta": result.meta,
-            })
+        if not (persist and self._persistent):
+            return
+        skey = _store_key(key)
+        record = {
+            "point": result.point, "value": result.value,
+            "cost_seconds": result.cost_seconds, "meta": result.meta,
+        }
+        if self._autoflush:
+            self._store.put(skey, record)  # put_many validates
+            self.flushes += 1
+        else:
+            # fail at put time, not at some later flush: the traceback
+            # must point at the evaluation whose record is broken
+            ensure_serializable(skey, record)
+            with self._lock:
+                self._dirty[skey] = record
+
+    def flush(self) -> None:
+        """Persist buffered puts as one store write (no-op when clean)."""
+        with self._lock:
+            dirty, self._dirty = self._dirty, {}
+        if dirty:
+            self._store.put_many(dirty)
+            self.flushes += 1
 
     def __len__(self) -> int:
         return len(self._d)
@@ -301,19 +358,33 @@ class EvaluationExecutor:
         timeout: Optional[float] = None,
         cache: Optional[MemoCache] = None,
         cache_path: Optional[str] = None,
+        workers: Optional[Sequence[str]] = None,
     ):
         self.objective = as_evaluator(objective)
         self.space = space
-        self.parallelism = max(1, int(parallelism))
+        self._parallelism = max(1, int(parallelism))
         # a timeout needs a pool to enforce it mid-run: the serial backend
         # can only flag an overrun after the objective returns
         if backend is None:
-            backend = ("serial" if self.parallelism == 1 and timeout is None
-                       else "thread")
+            if workers:
+                backend = "remote"
+            else:
+                backend = ("serial"
+                           if self._parallelism == 1 and timeout is None
+                           else "thread")
         self.backend = backend
         if self.backend not in BACKENDS:
             raise ValueError(
                 f"unknown executor backend {self.backend!r}; one of {BACKENDS}")
+        if self.backend == "remote" and not workers:
+            raise ValueError(
+                "backend='remote' needs workers=['host:port', ...] "
+                "(launch/worker.py daemons)")
+        if workers and self.backend != "remote":
+            raise ValueError(
+                f"workers= is only meaningful with backend='remote' "
+                f"(got backend={self.backend!r})")
+        self.workers = list(workers) if workers else None
         self.timeout = timeout
         if cache is not None and cache_path is not None:
             raise ValueError(
@@ -324,14 +395,30 @@ class EvaluationExecutor:
         if cache is not None:
             self.cache = cache
         elif self.backend == "process":
-            self.cache = MemoCache.process_safe(store=store)
+            self.cache = MemoCache.process_safe(store=store, autoflush=False)
         else:
-            self.cache = MemoCache(store=store)
+            self.cache = MemoCache(store=store, autoflush=False)
         if store is not None:
             self.cache.load_store(space)
         self._pool = None
         self._inflight: Dict = {}  # grid key -> future currently measuring it
         self._seq = 0  # monotonic submission index (orders completions)
+        if self.backend == "remote":
+            # connect eagerly: fail fast on an unreachable fleet, and the
+            # drivers size their in-flight window off the fleet's actual
+            # capacity (registered worker slots), not a local guess
+            self._pool = RemoteWorkerPool(self.workers,
+                                          eval_timeout=self.timeout)
+
+    @property
+    def parallelism(self) -> int:
+        """Measurement capacity the driver should keep in flight.  For
+        the remote backend this is the *live* fleet's slot total — it
+        shrinks when a worker dies, so the driver stops overfilling the
+        queue and starving tasks into their per-eval deadlines."""
+        if self.backend == "remote" and self._pool is not None:
+            return max(1, self._pool.parallelism)
+        return self._parallelism
 
     def _get_pool(self):
         if self._pool is None:
@@ -413,6 +500,7 @@ class EvaluationExecutor:
             out.append(PendingEval(dict(p), key, self._seq, future=fut,
                                    deadline=eval_deadline,
                                    fidelity=fidelity, rung=rung))
+        self.cache.flush()  # serial-path results + harvested strays
         return out
 
     def _harvest(self, key, future) -> None:
@@ -486,14 +574,30 @@ class EvaluationExecutor:
         # thread is impossible and wasting a paid-for result loses data
         return "running"
 
-    def _resolve_timeout(self, pending: PendingEval, now: float) -> None:
-        """Per-evaluation timeout expiry (never wall-clock expiry)."""
+    def _resolve_timeout(self, pending: PendingEval, now: float) -> bool:
+        """Per-evaluation timeout expiry (never wall-clock expiry).
+        Returns False when the pending was *re-dispatched* instead of
+        resolved (remote backend, see below) — the caller keeps waiting.
+        """
         if self._inflight.get(pending.key) is pending.future:
             del self._inflight[pending.key]
         if pending.future.cancel():
             # never started (pool starved by earlier slow evals): this point
-            # was not measured at all, so give it its run inline rather than
-            # recording a bogus failure
+            # was not measured at all — recording a bogus failure is wrong
+            if self.backend == "remote":
+                # ...and so is measuring it inline: the tuner-side
+                # objective is a stand-in over this backend (workers own
+                # the real one).  Re-dispatch to the fleet with a fresh
+                # deadline — the timeout clock properly starts at
+                # dispatch, and this task never was dispatched.
+                fut = self._get_pool().submit(run_objective, self.objective,
+                                              pending.point, pending.fidelity)
+                self._inflight[pending.key] = fut
+                pending.future = fut
+                pending.submitted_at = now
+                pending.deadline = (now + self.timeout
+                                    if self.timeout is not None else None)
+                return False
             pending._result = self._run_one(pending.point, pending.fidelity)
         else:
             # genuinely running too long: abandon the stuck worker (it is
@@ -507,6 +611,7 @@ class EvaluationExecutor:
         # the configuration itself
         self.cache.put(pending.key, pending._result,
                        persist=not pending._result.meta.get("timeout"))
+        return True
 
     def next_completed(self, pendings: Sequence[PendingEval],
                        deadline: Optional[float] = None,
@@ -531,15 +636,26 @@ class EvaluationExecutor:
             done, _ = wait({p.future for p in pendings}, timeout=wait_s,
                            return_when=FIRST_COMPLETED)
             if done:
+                # drain everything that is ready, then persist the whole
+                # drain as ONE store flush: N simultaneous completions
+                # cost one read-merge-write of the cache file, not N
+                # (the stragglers return instantly from done() on the
+                # caller's next call, without touching the store)
+                first = None
                 for p in pendings:
                     if p.future in done:
                         self._finalize(p)
-                        return p
+                        if first is None:
+                            first = p
+                self.cache.flush()
+                return first
             now = time.time()
             for p in pendings:
                 if p.deadline is not None and now >= p.deadline:
-                    self._resolve_timeout(p, now)
-                    return p
+                    if self._resolve_timeout(p, now):
+                        self.cache.flush()
+                        return p
+                    # re-dispatched (remote starvation): keep waiting
             if deadline is not None and now >= deadline:
                 return None
 
@@ -624,8 +740,36 @@ class EvaluationExecutor:
                                 continue
                             # never started (pool starved by earlier slow
                             # evals): this point was not measured at all, so
-                            # give it its run inline rather than recording a
-                            # bogus failure
+                            # give it its run rather than recording a bogus
+                            # failure
+                            if self.backend == "remote":
+                                # ...but not inline: the tuner-side
+                                # objective is a stand-in over this backend
+                                # (mirrors _resolve_timeout).  One fresh
+                                # dispatch to the fleet; if that starves or
+                                # busts the budget too, abandon unrecorded.
+                                retry = pool.submit(run_objective,
+                                                    self.objective, points[i])
+                                retry_s = self.timeout
+                                if deadline is not None:
+                                    left = max(0.0, deadline - time.time())
+                                    retry_s = (left if retry_s is None
+                                               else min(retry_s, left))
+                                try:
+                                    value, secs, meta = retry.result(
+                                        timeout=retry_s)
+                                except FutureTimeoutError:
+                                    if retry.cancel() or (
+                                            deadline is not None
+                                            and time.time() >= deadline):
+                                        abandoned[i] = True
+                                        continue
+                                    value, secs, meta = (
+                                        -math.inf, float(self.timeout),
+                                        {"timeout": True})
+                                results[i] = EvalResult(dict(points[i]),
+                                                        value, secs, meta)
+                                continue
                             results[i] = self._run_one(points[i])
                             continue
                         # genuinely running too long: abandon the stuck
@@ -637,6 +781,7 @@ class EvaluationExecutor:
                 if results[i] is not None:
                     self.cache.put(self.space.key(points[i]), results[i],
                                    persist=not results[i].meta.get("timeout"))
+            self.cache.flush()  # the whole batch is one store write
 
         for i, p in enumerate(points):  # resolve in-batch duplicates
             if results[i] is None and not abandoned[i]:
@@ -656,6 +801,7 @@ class EvaluationExecutor:
 
     # -- lifecycle -----------------------------------------------------------
     def close(self) -> None:
+        self.cache.flush()  # nothing buffered may outlive the executor
         if self._pool is not None:
             self._pool.shutdown(wait=False, cancel_futures=True)
             self._pool = None

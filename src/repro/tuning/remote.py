@@ -1,0 +1,624 @@
+"""Remote measurement workers: the RPC executor backend.
+
+The tuning loop's dominant cost is the measurement itself, so the last
+scale-out move is farming measurements to a fleet of remote hosts while
+one tuner keeps the engine, the history, and the memo cache.  This
+module is the tuner side of that split: :class:`RemoteWorkerPool`
+connects to ``launch/worker.py`` daemons and exposes the same
+``Future``-based surface the thread/process pools do, so the whole
+executor contract — ``submit`` / ``next_completed`` / ``preempt``,
+fidelity/rung tagging, per-evaluation deadlines, exactly-once recording
+— works over the wire unchanged.
+
+Wire protocol (version 1)
+-------------------------
+
+Every message is a **length-prefixed JSON object**: a 4-byte big-endian
+unsigned length followed by that many bytes of UTF-8 JSON.  ``NaN`` and
+``±Infinity`` use the Python ``json`` literals (both ends are this
+codebase), so ``-inf`` failure scores survive the round trip.
+
+The tuner is the TCP *client*; each worker daemon is a *server* (the
+driver is handed ``host:port`` addresses, so workers sit behind plain
+listening sockets — no rendezvous service needed).  Per connection:
+
+* handshake — tuner sends ``{"type": "hello", "protocol": 1}``; the
+  worker **registers** with ``{"type": "register", "protocol": 1,
+  "slots": n, "heartbeat_s": h, "pid": ..., "host": ...}``.  ``slots``
+  is how many concurrent measurements the worker runs; the pool's
+  ``parallelism`` is the fleet-wide sum.
+* tasks — tuner sends ``{"type": "task", "id": i, "point": {...},
+  "fidelity": f | null, "timeout": t | null}``; the worker *pulls* it
+  into its measurement thread pool, runs ``run_objective`` (the exact
+  function the local backends run — failures come back as ``-inf`` with
+  ``meta["error"]``, never as protocol errors), and streams back
+  ``{"type": "result", "id": i, "value": v, "seconds": s,
+  "meta": {...}}`` in completion order.
+* heartbeats — the worker sends ``{"type": "heartbeat"}`` every
+  ``heartbeat_s`` seconds.  The pool declares a worker dead when its
+  socket drops *or* no traffic arrives for ``3 * heartbeat_s``, so a
+  hung host is caught, not just a closed one.
+* ``{"type": "bye"}`` ends the session (either direction).
+
+Failure semantics
+-----------------
+
+* **worker death / disconnect** — every task in flight on that worker
+  is *reinjected* at the front of the dispatch queue and re-measured by
+  a surviving worker.  A disconnect is a property of the fleet, not of
+  the configuration: nothing is recorded as a failed config, and
+  exactly-once recording holds because a task's ``Future`` resolves at
+  most once (a result that raced the disconnect wins; the reinjected
+  copy is dropped when its future is already done).  Only when the
+  *whole* fleet is gone do outstanding futures fail with
+  ``ConnectionError`` — the run cannot proceed and says so loudly.
+* **per-eval timeouts** hold across the wire exactly as for the local
+  pools: the executor stamps each pending with ``now + timeout`` at
+  dispatch and resolves it to ``-inf``/``meta={"timeout": True}`` when
+  the deadline passes (the remote measurement is abandoned, its late
+  result discarded).  The timeout also rides the task message so a
+  harness that *can* stop early may.
+* **preemption** — ``future.cancel()`` works natively: a task still in
+  the pool's dispatch queue has a PENDING future and cancels cleanly
+  (never sent, nothing measured); once dispatched to a worker the
+  future is RUNNING, cancel returns False, and the measurement runs to
+  completion and is recorded — the same let-it-finish semantics as a
+  started pool task.
+
+Cache topology: workers never touch the memo cache.  Results flow back
+to the tuner process, which writes them into the shared
+``MemoCache``/``CacheStore`` exactly as for local measurements — so
+remote and local measurements share one memo and workers need **no
+shared filesystem** (the store requirement moved to the tuner host).
+"""
+from __future__ import annotations
+
+import json
+import os
+import socket
+import struct
+import threading
+import time
+from collections import deque
+from concurrent.futures import Future
+from typing import Dict, List, Optional, Sequence
+
+PROTOCOL_VERSION = 1
+_HEADER = struct.Struct(">I")
+# corruption guard, not a capacity plan: a frame is one point/result
+MAX_FRAME_BYTES = 64 << 20
+DEFAULT_HEARTBEAT_S = 2.0
+
+
+# ---------------------------------------------------------------------------
+# framing
+# ---------------------------------------------------------------------------
+
+def send_msg(sock: socket.socket, obj: dict) -> None:
+    """Send one length-prefixed JSON message."""
+    data = json.dumps(obj, allow_nan=True).encode("utf-8")
+    sock.sendall(_HEADER.pack(len(data)) + data)
+
+
+def _recv_exact(sock: socket.socket, n: int) -> bytes:
+    buf = bytearray()
+    while len(buf) < n:
+        chunk = sock.recv(n - len(buf))
+        if not chunk:
+            raise ConnectionError("peer closed the connection mid-frame")
+        buf += chunk
+    return bytes(buf)
+
+
+def recv_msg(sock: socket.socket) -> dict:
+    """Receive one length-prefixed JSON message (blocking)."""
+    (length,) = _HEADER.unpack(_recv_exact(sock, _HEADER.size))
+    if length > MAX_FRAME_BYTES:
+        raise ValueError(
+            f"frame of {length} bytes exceeds the {MAX_FRAME_BYTES}-byte "
+            "protocol limit (corrupt stream?)")
+    msg = json.loads(_recv_exact(sock, length).decode("utf-8"))
+    if not isinstance(msg, dict):
+        raise ValueError(f"protocol messages are JSON objects, got {type(msg)}")
+    return msg
+
+
+def parse_address(addr: str) -> tuple:
+    """``"host:port"`` -> ``(host, port)`` with a helpful error."""
+    host, sep, port = addr.rpartition(":")
+    if not sep or not host:
+        raise ValueError(f"worker address {addr!r} is not host:port")
+    return host, int(port)
+
+
+# ---------------------------------------------------------------------------
+# tuner side: the pool
+# ---------------------------------------------------------------------------
+
+class _RemoteTask:
+    __slots__ = ("id", "point", "fidelity", "timeout", "future", "dispatched")
+
+    def __init__(self, task_id: int, point: Dict, fidelity, timeout):
+        self.id = task_id
+        self.point = point
+        self.fidelity = fidelity
+        self.timeout = timeout
+        self.future: Future = Future()
+        # True once sent to any worker: the future is RUNNING from then
+        # on (let-it-finish preemption), including across a reinjection
+        self.dispatched = False
+
+
+class _WorkerConn:
+    __slots__ = ("address", "sock", "slots", "heartbeat_timeout", "inflight",
+                 "alive", "last_seen", "pid", "hostname")
+
+    def __init__(self, address, sock, slots, heartbeat_timeout, pid, hostname):
+        self.address = address
+        self.sock = sock
+        self.slots = slots
+        self.heartbeat_timeout = heartbeat_timeout
+        self.inflight: Dict[int, _RemoteTask] = {}
+        self.alive = True
+        self.last_seen = time.time()
+        self.pid = pid
+        self.hostname = hostname
+
+
+class RemoteWorkerPool:
+    """Futures-speaking pool over remote worker daemons.
+
+    Drop-in for the executor's thread/process pools: ``submit`` returns a
+    :class:`concurrent.futures.Future` resolving to the ``(value,
+    seconds, meta)`` triple ``run_objective`` produces (the worker runs
+    the *same* function), so ``EvaluationExecutor``'s wait, cancel,
+    timeout, and exactly-once machinery apply unchanged.
+
+    All workers must be reachable at construction (fail fast on a typo'd
+    fleet); mid-run failures are survived by reinjecting that worker's
+    in-flight tasks.  There is no reconnect: a dead worker stays dead
+    for the life of the pool.
+    """
+
+    def __init__(self, addresses: Sequence[str], *,
+                 eval_timeout: Optional[float] = None,
+                 connect_timeout: float = 10.0):
+        if not addresses:
+            raise ValueError("remote backend needs at least one "
+                             "host:port worker address")
+        self.eval_timeout = eval_timeout
+        self._lock = threading.Lock()
+        self._wake = threading.Condition(self._lock)
+        self._queue: deque = deque()
+        self._seq = 0
+        self._shutdown = False
+        self._workers: List[_WorkerConn] = []
+        deadline = time.time() + connect_timeout
+        for addr in addresses:
+            self._workers.append(self._connect(addr, deadline))
+        self._threads = [
+            threading.Thread(target=self._read_loop, args=(w,), daemon=True,
+                             name=f"remote-read-{w.address}")
+            for w in self._workers
+        ]
+        self._threads.append(threading.Thread(
+            target=self._dispatch_loop, daemon=True, name="remote-dispatch"))
+        self._threads.append(threading.Thread(
+            target=self._monitor_loop, daemon=True, name="remote-monitor"))
+        for t in self._threads:
+            t.start()
+
+    # -- connection setup ----------------------------------------------------
+    def _connect(self, address: str, deadline: float) -> _WorkerConn:
+        host, port = parse_address(address)
+        sock = None
+        while sock is None:
+            try:
+                sock = socket.create_connection((host, port), timeout=2.0)
+            except OSError as e:
+                if time.time() >= deadline:
+                    raise ConnectionError(
+                        f"cannot reach measurement worker {address}: {e!r} "
+                        "(is `launch/worker.py` / --serve-worker running "
+                        "there?)") from None
+                time.sleep(0.05)
+        sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        WorkerServer._enable_keepalive(sock)
+        sock.settimeout(10.0)  # handshake only; task reads block forever
+        try:
+            send_msg(sock, {"type": "hello", "protocol": PROTOCOL_VERSION})
+            reg = recv_msg(sock)
+        except (OSError, ValueError) as e:
+            sock.close()
+            raise ConnectionError(
+                f"handshake with worker {address} failed: {e!r}") from None
+        if reg.get("type") != "register" \
+                or reg.get("protocol") != PROTOCOL_VERSION:
+            sock.close()
+            raise ConnectionError(
+                f"worker {address} spoke {reg.get('type')!r} protocol "
+                f"{reg.get('protocol')!r}, expected register/"
+                f"{PROTOCOL_VERSION}")
+        sock.settimeout(None)
+        hb = float(reg.get("heartbeat_s") or DEFAULT_HEARTBEAT_S)
+        return _WorkerConn(address, sock, max(1, int(reg.get("slots", 1))),
+                           max(3.0 * hb, 1.0), reg.get("pid"),
+                           reg.get("host"))
+
+    # -- pool surface (what EvaluationExecutor calls) ------------------------
+    @property
+    def parallelism(self) -> int:
+        """Fleet-wide measurement capacity: slot total of *live* workers
+        (a dead worker's slots are gone — advertising them would make
+        the driver overfill the queue and starve tasks into their
+        per-eval deadlines)."""
+        with self._lock:
+            return sum(w.slots for w in self._workers if w.alive)
+
+    def alive_workers(self) -> int:
+        with self._lock:
+            return sum(1 for w in self._workers if w.alive)
+
+    def submit(self, fn, objective, point: Dict,
+               fidelity: Optional[float] = None) -> Future:
+        """Queue one measurement; returns its Future.
+
+        Signature-compatible with ``ThreadPoolExecutor.submit(
+        run_objective, objective, point, fidelity)``; ``fn`` and
+        ``objective`` are ignored — the worker daemon owns its own
+        objective instance (that is the point of the remote backend:
+        the objective's heavyweight state lives on the measurement
+        host, only points and results cross the wire).
+        """
+        with self._wake:
+            if self._shutdown:
+                raise RuntimeError("cannot submit to a shut-down pool")
+            if not any(w.alive for w in self._workers):
+                # fail loudly NOW: an enqueued task with no worker left
+                # to run it would never resolve, and the driver would
+                # wait on it forever
+                raise ConnectionError(
+                    "all remote measurement workers are disconnected; "
+                    "cannot dispatch new evaluations")
+            self._seq += 1
+            task = _RemoteTask(self._seq, dict(point), fidelity,
+                               self.eval_timeout)
+            self._queue.append(task)
+            self._wake.notify_all()
+        return task.future
+
+    def shutdown(self, wait: bool = True, cancel_futures: bool = False) -> None:
+        with self._wake:
+            if self._shutdown:
+                return
+            self._shutdown = True
+            # queued-but-undispatched tasks can never run once the pool
+            # is down, so their futures are cancelled regardless of
+            # cancel_futures — leaving them PENDING would hang anyone
+            # blocked on them.  (The flag keeps the ThreadPoolExecutor-
+            # compatible signature; dispatched tasks' futures likewise
+            # never resolve after the sockets close.)
+            for task in self._queue:
+                task.future.cancel()
+            self._queue.clear()
+            workers = [w for w in self._workers if w.alive]
+            self._wake.notify_all()
+        for w in workers:
+            try:
+                send_msg(w.sock, {"type": "bye"})
+            except OSError:
+                pass
+            try:
+                w.sock.close()
+            except OSError:
+                pass
+        if wait:
+            for t in self._threads:
+                t.join(timeout=2.0)
+
+    # -- internals -----------------------------------------------------------
+    def _pick(self):
+        """Next (task, worker) pair, or None; caller holds the lock."""
+        if not self._queue:
+            return None
+        best = None
+        for w in self._workers:
+            free = w.slots - len(w.inflight)
+            if w.alive and free > 0:
+                if best is None or free > (best.slots - len(best.inflight)):
+                    best = w
+        if best is None:
+            return None
+        return self._queue.popleft(), best
+
+    def _dispatch_loop(self) -> None:
+        while True:
+            with self._wake:
+                picked = None
+                while not self._shutdown and picked is None:
+                    picked = self._pick()
+                    if picked is None:
+                        self._wake.wait(0.1)
+                if self._shutdown:
+                    return
+                task, worker = picked
+                worker.inflight[task.id] = task
+            # future-state transition and the send happen outside the
+            # lock: sendall can block and cancel() takes the future lock
+            if task.future.done() or (
+                    not task.dispatched
+                    and not task.future.set_running_or_notify_cancel()):
+                # preempted while queued: never sent, nothing measured
+                with self._wake:
+                    worker.inflight.pop(task.id, None)
+                continue
+            task.dispatched = True
+            try:
+                send_msg(worker.sock, {
+                    "type": "task", "id": task.id, "point": task.point,
+                    "fidelity": task.fidelity, "timeout": task.timeout,
+                })
+            except OSError:
+                self._on_worker_down(worker)
+
+    def _read_loop(self, worker: _WorkerConn) -> None:
+        try:
+            while True:
+                msg = recv_msg(worker.sock)
+                kind = msg.get("type")
+                if kind == "result":
+                    with self._wake:
+                        worker.last_seen = time.time()
+                        task = worker.inflight.pop(msg["id"], None)
+                        self._wake.notify_all()  # a slot freed up
+                    if task is not None and not task.future.done():
+                        task.future.set_result(
+                            (msg["value"], msg["seconds"], msg["meta"]))
+                elif kind == "heartbeat":
+                    with self._lock:
+                        worker.last_seen = time.time()
+                elif kind == "bye":
+                    break
+        except (ConnectionError, OSError, ValueError):
+            pass
+        self._on_worker_down(worker)
+
+    def _monitor_loop(self) -> None:
+        interval = min((w.heartbeat_timeout for w in self._workers),
+                       default=1.0) / 4.0
+        interval = min(max(interval, 0.05), 1.0)
+        while not self._shutdown:
+            time.sleep(interval)
+            now = time.time()
+            for w in self._workers:
+                if w.alive and now - w.last_seen > w.heartbeat_timeout:
+                    self._on_worker_down(w)
+
+    def _on_worker_down(self, worker: _WorkerConn) -> None:
+        """Mark dead + reinject its in-flight tasks (front of the queue:
+        they have been waiting longest and a rung scheduler upstream may
+        be blocked on them)."""
+        with self._wake:
+            if not worker.alive:
+                return
+            worker.alive = False
+            reinject = [t for t in worker.inflight.values()
+                        if not t.future.done()]
+            worker.inflight.clear()
+            self._queue.extendleft(reversed(reinject))
+            fleet_down = not any(w.alive for w in self._workers)
+            stranded: List[_RemoteTask] = []
+            if fleet_down:
+                stranded = list(self._queue)
+                self._queue.clear()
+            self._wake.notify_all()
+        try:
+            worker.sock.close()
+        except OSError:
+            pass
+        if fleet_down and not self._shutdown:
+            err = ConnectionError(
+                "all remote measurement workers disconnected; "
+                f"{len(stranded)} evaluation(s) stranded")
+            for t in stranded:
+                if not t.future.done():
+                    t.future.set_exception(err)
+
+
+# ---------------------------------------------------------------------------
+# worker side: the daemon server
+# ---------------------------------------------------------------------------
+
+class WorkerServer:
+    """One measurement host: accepts a tuner, pulls tasks, streams results.
+
+    The daemon owns its objective instance (built once — evaluator state
+    like compile caches lives here for the life of the process) and runs
+    each task through ``run_objective``, the same isolation wrapper the
+    local backends use, on a ``slots``-wide thread pool.  A heartbeat
+    rides the connection every ``heartbeat_s`` seconds so the tuner can
+    tell a hung host from a busy one.
+
+    Sessions are serial: one tuner at a time, and when it disconnects
+    the worker goes back to accepting — so a fleet of daemons survives
+    tuner restarts.  Results for tasks still running when a session dies
+    are dropped (the tuner reinjected them already); the measurement
+    threads are left to finish and the next session gets fresh slots.
+
+    ``start()`` serves on a background thread (tests, in-process
+    fleets); ``serve_forever()`` is the daemon entry point.
+    """
+
+    def __init__(self, objective, host: str = "127.0.0.1", port: int = 0,
+                 slots: int = 1, heartbeat_s: float = DEFAULT_HEARTBEAT_S):
+        from repro.tuning.executor import run_objective
+        from repro.tuning.objective import as_evaluator
+
+        # bound eagerly, on the main thread: the first task must pay
+        # measurement cost only, and an import failure must crash the
+        # daemon at startup, not vanish inside a measurement thread
+        self._run_objective = run_objective
+        self.objective = as_evaluator(objective)
+        self.slots = max(1, int(slots))
+        self.heartbeat_s = float(heartbeat_s)
+        self.handshake_timeout_s = 10.0
+        self._lsock = socket.create_server((host, int(port)))
+        self.host, self.port = self._lsock.getsockname()[:2]
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+        self._active_conn: Optional[socket.socket] = None
+        self.sessions_served = 0
+
+    @property
+    def address(self) -> str:
+        return f"{self.host}:{self.port}"
+
+    def serve_forever(self) -> None:
+        self._lsock.settimeout(0.5)
+        while not self._stop.is_set():
+            try:
+                conn, _peer = self._lsock.accept()
+            except socket.timeout:
+                continue
+            except OSError:
+                break
+            self._active_conn = conn
+            try:
+                self._session(conn)
+            except (ConnectionError, OSError, ValueError):
+                pass  # tuner went away / spoke garbage: next session
+            finally:
+                self._active_conn = None
+                try:
+                    conn.close()
+                except OSError:
+                    pass
+
+    @staticmethod
+    def _enable_keepalive(conn: socket.socket) -> None:
+        """A tuner host that dies without FIN (power loss, partition)
+        would otherwise leave the session recv blocked for the kernel's
+        ~15-minute retransmit timeout — with serial sessions that wedges
+        the daemon out of the fleet.  TCP keepalive (tuned to ~minute
+        detection where the platform allows) turns it into an ordinary
+        connection error and the daemon goes back to accepting."""
+        conn.setsockopt(socket.SOL_SOCKET, socket.SO_KEEPALIVE, 1)
+        for opt, val in (("TCP_KEEPIDLE", 30), ("TCP_KEEPINTVL", 10),
+                         ("TCP_KEEPCNT", 3)):
+            if hasattr(socket, opt):  # Linux; darwin spells idle differently
+                conn.setsockopt(socket.IPPROTO_TCP, getattr(socket, opt), val)
+
+    def _session(self, conn: socket.socket) -> None:
+        from concurrent.futures import ThreadPoolExecutor
+
+        conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        self._enable_keepalive(conn)
+        # handshake under a timeout: sessions are serial, so a stray
+        # connection that never says hello (port scan, health probe)
+        # must not wedge the accept loop and take this host out of the
+        # fleet.  Task reads then block indefinitely — a live tuner is
+        # allowed to be quiet, and its death closes the socket.
+        conn.settimeout(self.handshake_timeout_s)
+        hello = recv_msg(conn)
+        if hello.get("type") != "hello" \
+                or hello.get("protocol") != PROTOCOL_VERSION:
+            send_msg(conn, {"type": "error",
+                            "error": f"unsupported hello {hello!r}"})
+            return
+        send_msg(conn, {
+            "type": "register", "protocol": PROTOCOL_VERSION,
+            "slots": self.slots, "heartbeat_s": self.heartbeat_s,
+            "pid": os.getpid(), "host": socket.gethostname(),
+        })
+        conn.settimeout(None)
+        self.sessions_served += 1
+        send_lock = threading.Lock()
+        session_over = threading.Event()
+
+        def heartbeat():
+            while not session_over.wait(self.heartbeat_s):
+                try:
+                    with send_lock:
+                        send_msg(conn, {"type": "heartbeat"})
+                except OSError:
+                    # the peer is unreachable: force the blocked session
+                    # recv to error out too, so the daemon returns to
+                    # accepting instead of wedging on a dead connection
+                    try:
+                        conn.shutdown(socket.SHUT_RDWR)
+                    except OSError:
+                        pass
+                    return
+
+        hb = threading.Thread(target=heartbeat, daemon=True)
+        hb.start()
+        pool = ThreadPoolExecutor(max_workers=self.slots,
+                                  thread_name_prefix="measure")
+        try:
+            while True:
+                msg = recv_msg(conn)
+                kind = msg.get("type")
+                if kind == "task":
+                    pool.submit(self._measure, conn, send_lock, msg)
+                elif kind == "bye":
+                    return
+                # unknown message types are ignored: forward-compatible
+        finally:
+            session_over.set()
+            # running measurements are abandoned (their tuner is gone and
+            # reinjected them); don't block the accept loop on them
+            pool.shutdown(wait=False, cancel_futures=True)
+
+    def _measure(self, conn, send_lock, msg) -> None:
+        try:
+            value, seconds, meta = self._run_objective(
+                self.objective, msg["point"], msg.get("fidelity"))
+        except BaseException as e:  # run_objective already catches
+            # objective errors; anything reaching here is worker
+            # infrastructure breaking — report it rather than going
+            # silent (a task that never answers looks like a hang)
+            value, seconds = -float("inf"), 0.0
+            meta = {"error": f"worker infrastructure failure: {e!r}"}
+        try:
+            json.dumps(meta, allow_nan=True)
+        except (TypeError, ValueError):
+            # never let a weird evaluator meta kill the session: the
+            # measurement is still real, only its annotations are not
+            # transportable
+            meta = {"meta_error": "evaluator meta was not "
+                                  "JSON-serializable and was dropped"}
+        try:
+            with send_lock:
+                send_msg(conn, {"type": "result", "id": msg["id"],
+                                "value": value, "seconds": seconds,
+                                "meta": meta})
+        except OSError:
+            pass  # session died; the tuner reinjects this task elsewhere
+
+    # -- in-process lifecycle (tests / embedded fleets) ----------------------
+    def start(self) -> "WorkerServer":
+        self._thread = threading.Thread(target=self.serve_forever,
+                                        daemon=True, name="worker-serve")
+        self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        """Hard-stop the worker (tests use this to simulate a host dying:
+        the active session's socket is closed mid-conversation)."""
+        self._stop.set()
+        conn = self._active_conn
+        if conn is not None:
+            try:
+                conn.shutdown(socket.SHUT_RDWR)
+            except OSError:
+                pass
+            try:
+                conn.close()
+            except OSError:
+                pass
+        try:
+            self._lsock.close()
+        except OSError:
+            pass
+        if self._thread is not None:
+            self._thread.join(timeout=2.0)
