@@ -69,9 +69,13 @@ def _decode_kernel(
 
     @pl.when(ki == nk - 1)
     def _finalize():
+        # length-0 rows (empty cache slots) accumulate l == 0; emit exact
+        # zeros instead of 0/0 NaN
         l = l_scr[0]
-        denom = jnp.where(l == 0.0, 1.0, l)
-        o_ref[...] = (acc_scr[...] / denom).astype(o_ref.dtype)
+        alive = l > 0.0
+        denom = jnp.where(alive, l, 1.0)
+        out = jnp.where(alive, acc_scr[...] / denom, 0.0)
+        o_ref[...] = out.astype(o_ref.dtype)
 
 
 def decode_attention(

@@ -101,9 +101,14 @@ def _flash_kernel(
 
     @pl.when(ki == nk - 1)
     def _finalize():
+        # A fully-masked query row (padding past seq_q, or a small window
+        # with nothing in range) accumulates l == 0; emit exact zeros for
+        # it instead of 0/0 NaN.
         l = l_scr[...]
-        denom = jnp.where(l == 0.0, 1.0, l)
-        o_ref[...] = (acc_scr[...] / denom[:, None]).astype(o_ref.dtype)
+        alive = l > 0.0
+        denom = jnp.where(alive, l, 1.0)
+        out = jnp.where(alive[:, None], acc_scr[...] / denom[:, None], 0.0)
+        o_ref[...] = out.astype(o_ref.dtype)
 
 
 def flash_attention(

@@ -33,6 +33,23 @@ def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def _tuned(db, kernel: str, dims: dict, defaults: dict) -> dict:
+    """Trace-time TuningDB consult: best-known tile config for this
+    kernel at these call shapes, else the caller's heuristic defaults.
+
+    Runs while the wrapper is being traced (shapes are concrete python
+    ints), so a hit rewrites the tile knobs of the jaxpr being built and
+    costs nothing per step.  ``db=None`` — the default everywhere — is
+    byte-identical to the historical behavior.
+    """
+    if db is None:
+        return defaults
+    cfg = db.kernel_config(kernel, dims)
+    if not cfg:
+        return defaults
+    return {k: int(cfg.get(k, v)) for k, v in defaults.items()}
+
+
 def _ref_vjp(pallas_fn, ref_fn):
     """custom_vjp: pallas forward, reference-recompute backward."""
 
@@ -69,11 +86,18 @@ def attention(
     block_kv: int = 128,
     unroll: bool = False,
     prune: bool = False,
+    db=None,
 ) -> jax.Array:
     """(B,Sq,H,dh) x (B,Sk,K,dh) -> (B,Sq,H,dh)."""
     assert impl in _VALID_IMPLS, impl
     if impl == "ref":
         return ref.attention_ref(q, k, v, causal=causal, window=window, scale=scale)
+    B, Sq, H, dh = q.shape
+    _, Sk, K, _ = k.shape
+    t = _tuned(db, "flash_attention",
+               {"B": B, "Sq": Sq, "Sk": Sk, "H": H, "K": K, "dh": dh},
+               {"block_q": block_q, "block_kv": block_kv})
+    block_q, block_kv = t["block_q"], t["block_kv"]
     if impl == "chunked":
         with jax.named_scope("krnl_flash_attn"):
             return ref.attention_chunked_ref(
@@ -105,12 +129,18 @@ def decode_attention(
     scale: Optional[float] = None,
     impl: str = "ref",
     block_kv: int = 512,
+    db=None,
 ) -> jax.Array:
     """(B,H,dh) x (B,Smax,K,dh) cache + (B,) lengths -> (B,H,dh)."""
     assert impl in _VALID_IMPLS, impl
     if impl in ("ref", "chunked"):
         with jax.named_scope("krnl_decode_attn"):
             return ref.decode_attention_ref(q, k, v, lengths, scale=scale)
+    B, H, dh = q.shape
+    _, Smax, K, _ = k.shape
+    block_kv = _tuned(db, "decode_attention",
+                      {"B": B, "H": H, "K": K, "dh": dh, "Smax": Smax},
+                      {"block_kv": block_kv})["block_kv"]
     return _decode_mod.decode_attention(
         q, k, v, lengths, scale=scale, block_kv=block_kv, interpret=_interpret()
     )
@@ -128,10 +158,16 @@ def rmsnorm(
     *,
     impl: str = "ref",
     block_rows: int = 256,
+    db=None,
 ) -> jax.Array:
     assert impl in _VALID_IMPLS, impl
     if impl in ("ref", "chunked"):
         return ref.rmsnorm_ref(x, scale, eps)
+    rows = 1
+    for d in x.shape[:-1]:
+        rows *= int(d)
+    block_rows = _tuned(db, "rmsnorm", {"rows": rows, "D": x.shape[-1]},
+                        {"block_rows": block_rows})["block_rows"]
     pallas_fn = functools.partial(
         _rms_mod.rmsnorm, eps=eps, block_rows=block_rows, interpret=_interpret()
     )
@@ -155,11 +191,17 @@ def ssm_scan(
     impl: str = "chunked",
     chunk: int = 128,
     block_d: int = 256,
+    db=None,
 ) -> jax.Array:
     """Selective scan, zero init state.  Returns y (B,S,D)."""
     assert impl in _VALID_IMPLS, impl
     if impl == "ref":
         return ref.ssm_scan_ref(x, dt, A, B_in, C_in, D_skip)[0]
+    B, S, D = x.shape
+    t = _tuned(db, "ssm_scan",
+               {"B": B, "S": S, "D": D, "N": A.shape[-1]},
+               {"chunk": chunk, "block_d": block_d})
+    chunk, block_d = t["chunk"], t["block_d"]
     if impl == "chunked":
         with jax.named_scope("krnl_ssm_scan"):
             return ref.ssm_scan_chunked_ref(
@@ -181,11 +223,16 @@ def gla_scan(
     *,
     impl: str = "chunked",
     chunk: int = 64,
+    db=None,
 ) -> jax.Array:
     """RWKV-6 wkv scan, zero init state.  Returns y (B,S,H,dv)."""
     assert impl in _VALID_IMPLS, impl
     if impl == "ref":
         return ref.gla_scan_ref(r, k, v, w, u)[0]
+    B, S, H, dk = k.shape
+    chunk = _tuned(db, "gla_scan",
+                   {"B": B, "S": S, "H": H, "dk": dk, "dv": v.shape[-1]},
+                   {"chunk": chunk})["chunk"]
     if impl == "chunked":
         with jax.named_scope("krnl_gla_scan"):
             return ref.gla_scan_chunked_ref(r, k, v, w, u, chunk=chunk)[0]

@@ -8,6 +8,7 @@ fixed decode batches, prefills, then decodes until every request has
 ``gen_len`` tokens, refilling slots as requests finish.
 """
 import argparse
+import dataclasses
 import time
 
 import jax
@@ -29,6 +30,10 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--gen-len", type=int, default=32)
     ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--tuning-db", default=None, metavar="PATH",
+                    help="persisted TuningDB (benchmarks/kernel_sweep.py "
+                         "output); tuned kernel tiles are picked up at "
+                         "trace time")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -36,6 +41,9 @@ def main(argv=None):
         cfg = cfg.reduced()
     model = build_model(cfg)
     rt = Runtime(compute_dtype="f32")
+    if args.tuning_db:
+        from repro.tuning.tundb import TuningDB
+        rt = dataclasses.replace(rt, tuning_db=TuningDB(args.tuning_db))
     params, _ = split_params(model.init(jax.random.PRNGKey(0)))
 
     rng = np.random.default_rng(0)

@@ -36,6 +36,10 @@ def main(argv=None):
     ap.add_argument("--d-model", type=int, default=None,
                     help="override reduced width (e.g. for the ~100M example)")
     ap.add_argument("--layers", type=int, default=None)
+    ap.add_argument("--tuning-db", default=None, metavar="PATH",
+                    help="persisted TuningDB (benchmarks/kernel_sweep.py "
+                         "output); tuned kernel tiles are picked up at "
+                         "trace time")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -59,8 +63,12 @@ def main(argv=None):
                          checkpoint_every=args.checkpoint_every)
     injector = (FailureInjector(at_steps=[args.inject_failure])
                 if args.inject_failure is not None else None)
+    rt = Runtime(compute_dtype="f32")
+    if args.tuning_db:
+        from repro.tuning.tundb import TuningDB
+        rt = dataclasses.replace(rt, tuning_db=TuningDB(args.tuning_db))
     trainer = Trainer(cfg, opt_cfg, data_cfg, tcfg,
-                      rt=Runtime(compute_dtype="f32"),
+                      rt=rt,
                       failure_injector=injector)
     log = trainer.run()
     first, last = log[0]["loss"], log[-1]["loss"]

@@ -118,12 +118,13 @@ def _cross_attend(blk, x, k, v, *, cfg, rt, mode):
         lengths = jnp.full((x.shape[0],), k.shape[1], jnp.int32)
         out = ops.decode_attention(q[:, 0], k.astype(rt.dtype()),
                                    v.astype(rt.dtype()), lengths,
-                                   impl=rt.attn_impl, block_kv=rt.block_kv)[:, None]
+                                   impl=rt.attn_impl, block_kv=rt.block_kv,
+                                   db=rt.tuning_db)[:, None]
     else:
         out = ops.attention(q, k.astype(rt.dtype()), v.astype(rt.dtype()),
                             causal=False, impl=rt.attn_impl,
                             block_q=rt.block_q, block_kv=rt.block_kv,
-                            unroll=rt.unroll_layers)
+                            unroll=rt.unroll_layers, db=rt.tuning_db)
     return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(rt.dtype())).astype(x.dtype)
 
 

@@ -39,7 +39,7 @@ def init_rmsnorm(d: int) -> dict:
 
 
 def rmsnorm(p, x, eps: float, rt: Runtime) -> jax.Array:
-    return ops.rmsnorm(x, p["scale"], eps)
+    return ops.rmsnorm(x, p["scale"], eps, db=rt.tuning_db)
 
 
 def init_layernorm(d: int) -> dict:
@@ -153,6 +153,7 @@ def attention_apply(
             block_kv=rt.block_kv,
             unroll=rt.unroll_layers,
             prune=rt.attn_prune,
+            db=rt.tuning_db,
         )
         if mode == "prefill" and kv_override is None:
             new_cache = _fill_kv_cache(cfg, cache, k, v)
@@ -174,7 +175,7 @@ def attention_apply(
         lengths = jnp.full((B,), length, jnp.int32)
         out = ops.decode_attention(
             q[:, 0], _dt(ck, rt), _dt(cv, rt), lengths,
-            impl=rt.attn_impl, block_kv=rt.block_kv,
+            impl=rt.attn_impl, block_kv=rt.block_kv, db=rt.tuning_db,
         )[:, None]
         new_cache = {"k": ck, "v": cv}
 
@@ -268,7 +269,7 @@ def mla_apply(
         out = ops.attention(
             qq, k, v, causal=True, scale=scale,
             impl=rt.attn_impl, block_q=rt.block_q, block_kv=rt.block_kv,
-            unroll=rt.unroll_layers, prune=rt.attn_prune,
+            unroll=rt.unroll_layers, prune=rt.attn_prune, db=rt.tuning_db,
         )
         new_cache = None
         if mode == "prefill":
@@ -598,7 +599,8 @@ def mamba_apply(
     new_cache = None
     if mode == "full":
         y = ops.ssm_scan(xconv, dt, A, Bc, Cc, p["D"],
-                         impl=rt.scan_impl, chunk=rt.scan_chunk)
+                         impl=rt.scan_impl, chunk=rt.scan_chunk,
+                         db=rt.tuning_db)
     elif mode == "prefill":
         from repro.kernels.ref import ssm_scan_chunked_ref
 
@@ -725,7 +727,8 @@ def rwkv_tmix_apply(
     new_cache = None
     if mode == "full":
         y = ops.gla_scan(r, k, v, w.astype(r.dtype), u.astype(r.dtype),
-                         impl=rt.scan_impl, chunk=rt.scan_chunk)
+                         impl=rt.scan_impl, chunk=rt.scan_chunk,
+                         db=rt.tuning_db)
     elif mode == "prefill":
         from repro.kernels.ref import gla_scan_chunked_ref
 

@@ -4,14 +4,34 @@ These are the JAX/TPU analogues of the paper's TensorFlow threading-model
 parameters (DESIGN.md §2).  ``Runtime`` is a frozen dataclass so it is
 hashable and can be a static argument of jitted steps; the tuner mutates it
 via ``dataclasses.replace``.
+
+``tuning_db`` attaches a persistent :class:`~repro.tuning.tundb.TuningDB`
+of best-known kernel configurations: the kernel dispatch layer
+(``repro.kernels.ops``) consults it at trace time with the actual call
+shapes and overrides the tile knobs below on a hit, falling back to them
+on a miss.  ``None`` (the default) is byte-identical to the historical
+behavior.  A ``TuningDB`` hashes by identity, so the dataclass stays
+hashable.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
+from typing import TYPE_CHECKING, Optional
 
 import jax.numpy as jnp
 
+if TYPE_CHECKING:  # annotation only: models must not depend on the tuning
+    from repro.tuning.tundb import TuningDB  # stack at import time
+
 _DTYPES = {"bf16": jnp.bfloat16, "f32": jnp.float32}
+
+#: The one validated remat vocabulary.  ``BackendConfig`` (the tuner's
+#: search space) and ``Runtime`` (the executing backend) must accept
+#: exactly the same choices — they drifted once (``"names"`` was tunable
+#: but undocumented here), and a drifted enum means the tuner can emit
+#: configurations the backend silently mis-handles.  Every choice must
+#: lower (pinned by tests/test_config_plumbing.py).
+REMAT_MODES = ("none", "dots", "names", "full")
 
 
 @dataclass(frozen=True)
@@ -24,7 +44,7 @@ class Runtime:
     scan_chunk: int = 128
 
     # memory/recompute policy
-    remat: str = "none"  # none | dots | full
+    remat: str = "none"  # one of REMAT_MODES: none | dots | names | full
 
     # numerics
     compute_dtype: str = "bf16"  # bf16 | f32
@@ -42,6 +62,15 @@ class Runtime:
     # (XLA's HloCostAnalysis counts while bodies once; the roofline pipeline
     # compiles unrolled 1- and 2-period variants and extrapolates).
     unroll_layers: bool = False
+
+    # best-known kernel configs, consulted at trace time (see module
+    # docstring); None => heuristic tile defaults above
+    tuning_db: Optional["TuningDB"] = None
+
+    def __post_init__(self):
+        if self.remat not in REMAT_MODES:
+            raise ValueError(
+                f"unknown remat mode {self.remat!r}; one of {REMAT_MODES}")
 
     def dtype(self):
         return _DTYPES[self.compute_dtype]

@@ -6,6 +6,7 @@ recurrent-state cache.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Dict
 
 import jax
@@ -15,7 +16,17 @@ from repro.models.model import Model
 from repro.models.runtime import Runtime
 
 
-def make_prefill_step(model: Model, rt: Runtime):
+def _with_db(rt: Runtime, tuning_db) -> Runtime:
+    """Attach a TuningDB to the runtime (trace-time kernel-config lookup);
+    ``tuning_db=None`` leaves ``rt`` untouched — byte-identical behavior."""
+    if tuning_db is None:
+        return rt
+    return dataclasses.replace(rt, tuning_db=tuning_db)
+
+
+def make_prefill_step(model: Model, rt: Runtime, *, tuning_db=None):
+    rt = _with_db(rt, tuning_db)
+
     def prefill_step(params, batch: Dict[str, jax.Array], cache):
         logits, _, new_cache = model.apply(
             params, batch, rt=rt, mode="prefill", cache=cache
@@ -25,7 +36,9 @@ def make_prefill_step(model: Model, rt: Runtime):
     return prefill_step
 
 
-def make_decode_step(model: Model, rt: Runtime):
+def make_decode_step(model: Model, rt: Runtime, *, tuning_db=None):
+    rt = _with_db(rt, tuning_db)
+
     def decode_step(params, tokens: jax.Array, cache):
         return model.decode_step(params, tokens, cache, rt=rt)
 
@@ -36,10 +49,11 @@ def greedy_sample(logits: jax.Array) -> jax.Array:
     return jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
 
 
-def generate(model: Model, params, batch, *, rt: Runtime, cache, steps: int):
+def generate(model: Model, params, batch, *, rt: Runtime, cache, steps: int,
+             tuning_db=None):
     """Prefill + greedy decode loop (example/serving driver path)."""
-    prefill = make_prefill_step(model, rt)
-    decode = make_decode_step(model, rt)
+    prefill = make_prefill_step(model, rt, tuning_db=tuning_db)
+    decode = make_decode_step(model, rt, tuning_db=tuning_db)
     logits, cache = prefill(params, batch, cache)
     tok = greedy_sample(logits)
     out = [tok]

@@ -48,8 +48,16 @@ def _split_microbatches(batch: Dict[str, jax.Array], k: int):
 
 
 def make_train_step(model: Model, opt_cfg: OptimizerConfig, rt: Runtime,
-                    microbatches: int = 1):
-    """Returns train_step(params, opt_state, batch) -> (params, opt_state, metrics)."""
+                    microbatches: int = 1, *, tuning_db=None):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    ``tuning_db`` attaches a :class:`~repro.tuning.tundb.TuningDB` for
+    trace-time kernel-config lookup; ``None`` is byte-identical to the
+    historical behavior.
+    """
+    if tuning_db is not None:
+        import dataclasses
+        rt = dataclasses.replace(rt, tuning_db=tuning_db)
     loss_fn = make_loss_fn(model, rt)
     grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
 

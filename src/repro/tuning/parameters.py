@@ -18,7 +18,7 @@ import dataclasses
 from dataclasses import dataclass
 
 from repro.configs.base import ModelConfig
-from repro.models.runtime import Runtime
+from repro.models.runtime import REMAT_MODES, Runtime
 
 
 @dataclass(frozen=True)
@@ -40,6 +40,15 @@ class BackendConfig:
     serve_bf16_params: bool = False  # beyond-paper: bf16 serving weights
     moe_impl: str = "gspmd"  # beyond-paper alt: ep_local (shard_map EP)
     cache_shard: str = "seq"  # decode KV-cache shard dim: seq | heads
+
+    def __post_init__(self):
+        # same validated vocabulary as Runtime (the enums drifted once:
+        # "names" was tunable here but undocumented there) — reject at
+        # construction, where the bad value's origin is still in the
+        # traceback, not at some later lowering
+        if self.remat not in REMAT_MODES:
+            raise ValueError(
+                f"unknown remat mode {self.remat!r}; one of {REMAT_MODES}")
 
     def runtime(self) -> Runtime:
         return Runtime(
@@ -69,7 +78,7 @@ class BackendConfig:
 # paper-faithful default: the configuration a savvy user would start from
 BASELINE = BackendConfig()
 
-_REMAT = ("none", "dots", "names", "full")
+_REMAT = REMAT_MODES  # single source of truth: repro.models.runtime
 _STYLES = ("tp", "fsdp_tp")
 
 
@@ -105,8 +114,26 @@ def backend_space(cfg: ModelConfig, *, kind: str = "train") -> "list[dict]":
     return dims
 
 
-def config_from_point(point: dict, base: BackendConfig = BASELINE) -> BackendConfig:
-    """Instantiate a BackendConfig from a tuner point (dict of dim values)."""
+def config_from_point(point: dict, base: BackendConfig = BASELINE,
+                      *, allow_extra: "tuple | frozenset" = (),
+                      ) -> BackendConfig:
+    """Instantiate a BackendConfig from a tuner point (dict of dim values).
+
+    Point keys that are not ``BackendConfig`` fields raise ``ValueError``:
+    silently dropping them meant a typo'd search-space dim (``blok_q``)
+    tuned nothing while the search happily burned budget varying it.
+    ``allow_extra`` names keys a caller *knowingly* handles outside
+    ``BackendConfig`` (e.g. host-level knobs applied by a harness) —
+    those are skipped, everything else unknown is an error.
+    """
     fields = {f.name for f in dataclasses.fields(BackendConfig)}
+    extra = frozenset(allow_extra)
+    stray = sorted(k for k in point if k not in fields and k not in extra)
+    if stray:
+        raise ValueError(
+            f"point keys {stray} are not BackendConfig fields "
+            f"(known: {sorted(fields)}); a misspelled search-space dim "
+            "would otherwise tune nothing — fix the dim name, or pass "
+            "allow_extra= for keys genuinely handled elsewhere")
     kw = {k: v for k, v in point.items() if k in fields}
     return dataclasses.replace(base, **kw)

@@ -1,5 +1,7 @@
 """Cost-model units: analytic traffic, kernel credit, backend config."""
 
+import pytest
+
 from repro.configs import get_config, get_shape
 from repro.tuning.cost_model import (
     analytic_hbm_traffic,
@@ -21,11 +23,18 @@ def test_backend_config_mesh_factorization():
 
 
 def test_config_from_point_roundtrip():
-    pt = {"log2_dp": 2, "remat": "names", "microbatches": 4, "block_q": 256,
-          "not_a_field": 1}
+    pt = {"log2_dp": 2, "remat": "names", "microbatches": 4, "block_q": 256}
     bc = config_from_point(pt)
     assert bc.log2_dp == 2 and bc.remat == "names" and bc.microbatches == 4
     assert bc.block_q == 256
+    # a stray key (typo'd search-space dim) must be loud, not silently
+    # dropped; allow_extra is the explicit opt-out for keys a harness
+    # handles outside BackendConfig
+    with pytest.raises(ValueError, match="not_a_field"):
+        config_from_point(dict(pt, not_a_field=1))
+    bc2 = config_from_point(dict(pt, not_a_field=1),
+                            allow_extra=("not_a_field",))
+    assert bc2 == bc
 
 
 def test_model_flops_conventions():

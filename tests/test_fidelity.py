@@ -603,7 +603,7 @@ def test_roofline_reconsults_store_before_recompiling(tmp_path, monkeypatch):
     cache = str(tmp_path / "roofline.json")
     ev = RooflineEvaluator("qwen2-0.5b", "train_4k", cache_path=cache)
     assert ev._cache == {}  # store was empty at startup
-    point = {"inter_op": 1}
+    point = {"log2_dp": 1}
     rec = {"skipped": False,
            "memory": {"per_device_B": 1.0},
            "roofline": {"throughput_tok_s": 123.0}}
