@@ -1,18 +1,27 @@
 """Sharded, asynchronous, integrity-checked checkpointing.
 
-Layout (one directory per step, atomic rename commit):
+Two checkpointers share the idioms (atomic rename commit, sha256
+integrity, keep-last-k retention):
 
-    <root>/step_00000100/
-        shard_000.npz     # flattened (path -> array) leaves
-        manifest.json     # treedef paths, shapes, dtypes, sha256s, metadata
+* :class:`Checkpointer` — pytree/array state (training state).  Layout
+  is one directory per step::
 
-Features needed at 1000+ nodes, exercised single-process here:
-  * async save off the critical path (background thread)
-  * keep-last-k + keep-best retention
-  * restore onto a DIFFERENT mesh / sharding (elastic rescale): leaves are
-    saved as full (unsharded) arrays per-host shard-group and re-placed
-    with the restore-time shardings
-  * corruption detection via per-file sha256 in the manifest
+      <root>/step_00000100/
+          shard_000.npz     # flattened (path -> array) leaves
+          manifest.json     # treedef paths, shapes, dtypes, sha256s, metadata
+
+  Features needed at 1000+ nodes, exercised single-process here:
+    * async save off the critical path (background thread)
+    * keep-last-k + keep-best retention
+    * restore onto a DIFFERENT mesh / sharding (elastic rescale): leaves
+      are saved as full (unsharded) arrays per-host shard-group and
+      re-placed with the restore-time shardings
+    * corruption detection via per-file sha256 in the manifest
+
+* :class:`JsonCheckpointer` — JSON-document state (the tuning service's
+  per-job snapshots).  Same commit discipline, stdlib-only: ``jax`` is
+  imported lazily so worker daemons and the service can checkpoint on
+  hosts that have no accelerator stack installed.
 """
 from __future__ import annotations
 
@@ -24,11 +33,12 @@ import time
 from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Any, Dict, List, Optional
 
-import jax
 import numpy as np
 
 
 def _flatten(tree) -> Dict[str, np.ndarray]:
+    import jax
+
     flat = {}
     for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
         key = jax.tree_util.keystr(path)
@@ -66,6 +76,8 @@ class Checkpointer:
     # -- save ----------------------------------------------------------------
     def save(self, step: int, tree: Any, *, metadata: Optional[dict] = None,
              metric: Optional[float] = None) -> None:
+        import jax
+
         # materialize on host synchronously (cheap vs the write), write async
         flat = _flatten(jax.device_get(tree))
         meta = dict(metadata or {})
@@ -120,6 +132,8 @@ class Checkpointer:
         """Restore into the structure of ``like``; optionally place each leaf
         with ``shardings`` (a parallel pytree) — this is the elastic path:
         the target mesh may differ from the save-time mesh."""
+        import jax
+
         step = step if step is not None else self.latest_step()
         assert step is not None, "no checkpoint found"
         d = self._dir(step)
@@ -142,3 +156,64 @@ class Checkpointer:
                 arr = jax.device_put(arr, sh)
             out.append(arr)
         return treedef.unflatten(out), manifest["metadata"]
+
+
+class JsonCheckpointer:
+    """Atomic, integrity-checked snapshots of a JSON document.
+
+    The tuning service checkpoints each job's state (spec, status,
+    history path) through this: every :meth:`save` writes
+    ``snap_<seq>.json`` with an embedded sha256 over its payload and
+    commits it by atomic rename, then prunes to ``keep_last``.
+    :meth:`load` returns the newest snapshot that passes its integrity
+    check — a snapshot truncated by the very crash being recovered from
+    is skipped, and the previous good one restores instead.  Stdlib
+    only; safe on hosts without the accelerator stack.
+    """
+
+    def __init__(self, root, *, keep_last: int = 3):
+        self.root = pathlib.Path(root)
+        self.root.mkdir(parents=True, exist_ok=True)
+        self.keep_last = max(1, int(keep_last))
+
+    def _seqs(self) -> List[int]:
+        out = []
+        for p in self.root.glob("snap_*.json"):
+            try:
+                out.append(int(p.stem.split("_")[1]))
+            except (IndexError, ValueError):
+                continue
+        return sorted(out)
+
+    def _path(self, seq: int) -> pathlib.Path:
+        return self.root / f"snap_{seq:08d}.json"
+
+    def save(self, doc: dict) -> int:
+        """Snapshot ``doc``; returns the sequence number committed."""
+        payload = json.dumps(doc, allow_nan=True, sort_keys=True)
+        digest = hashlib.sha256(payload.encode("utf-8")).hexdigest()
+        seqs = self._seqs()
+        seq = (seqs[-1] + 1) if seqs else 0
+        final = self._path(seq)
+        tmp = final.with_suffix(".tmp")
+        tmp.write_text(json.dumps(
+            {"sha256": digest, "time": time.time(), "doc": payload}))
+        tmp.replace(final)  # atomic commit
+        for old in seqs[: max(0, len(seqs) + 1 - self.keep_last)]:
+            self._path(old).unlink(missing_ok=True)
+        return seq
+
+    def load(self) -> Optional[dict]:
+        """Newest snapshot that passes its integrity check, or None."""
+        for seq in reversed(self._seqs()):
+            try:
+                wrapper = json.loads(self._path(seq).read_text())
+                payload = wrapper["doc"]
+                digest = hashlib.sha256(
+                    payload.encode("utf-8")).hexdigest()
+                if digest != wrapper["sha256"]:
+                    continue  # torn write: fall back to the previous snap
+                return json.loads(payload)
+            except (OSError, KeyError, ValueError, TypeError):
+                continue
+        return None

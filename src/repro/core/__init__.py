@@ -3,8 +3,9 @@ parameters for training/inference throughput — BO (GP + SMSego), GA, and
 Nelder-Mead simplex behind a common engine interface (paper Fig. 4).
 
 Engines speak the ask/tell contract (``engine.ask(n, history)`` ->
-deduplicated candidate batch; ``engine.tell(points, values, costs)``
-feeds results back, incrementally and in completion order) and the
+deduplicated candidate batch; ``engine.tell(observations)`` feeds
+:class:`Observation` records back, incrementally and in completion
+order) and the
 :class:`Tuner` drives them through a completion-driven scheduler over
 the parallel evaluation executor (``repro.tuning.executor``) under an
 iteration budget, a wall-clock budget, or both — with an optional
@@ -26,12 +27,15 @@ from repro.core.genetic import GeneticAlgorithm
 from repro.core.gp import GaussianProcess
 from repro.core.history import History
 from repro.core.neldermead import NelderMead
+from repro.core.observation import Observation
 from repro.core.random_search import RandomSearch
 from repro.core.space import CatDim, IntDim, SearchSpace
-from repro.core.tuner import ENGINES, Tuner, TunerConfig
+from repro.core.tuner import (ENGINES, ExecutorConfig, MultiFidelityConfig,
+                              Tuner, TunerConfig)
 
 __all__ = [
-    "BayesOpt", "CatDim", "ENGINES", "Engine", "Exhaustive",
-    "GaussianProcess", "GeneticAlgorithm", "History", "IntDim", "NelderMead",
-    "RandomSearch", "SearchSpace", "Tuner", "TunerConfig",
+    "BayesOpt", "CatDim", "ENGINES", "Engine", "ExecutorConfig",
+    "Exhaustive", "GaussianProcess", "GeneticAlgorithm", "History", "IntDim",
+    "MultiFidelityConfig", "NelderMead", "Observation", "RandomSearch",
+    "SearchSpace", "Tuner", "TunerConfig",
 ]

@@ -11,18 +11,28 @@ Engines expose two methods:
   (``history.seen``) and points currently in flight
   (``history.pending``), so a parallel executor can measure the whole
   batch concurrently without wasted repeats.
-* ``tell(points, values, costs=None)`` — report measured objective
-  values back.  Under the completion-driven tuner loop, ``tell`` arrives
-  *incrementally and in completion order*: typically one result at a
-  time, the moment its measurement finishes, which may not be the order
-  the points were asked.  Engines must therefore tolerate partial and
-  reordered feedback; the default implementation forwards each pair to
-  ``observe`` (the single-point state update), which is order-free and
-  what most engines need, while engines with speculative batches
-  (Nelder-Mead) buffer results and reconcile them against their state
-  machine.  ``costs`` carries the measured ``cost_seconds`` of each
-  evaluation so engines can become wall-clock-aware (the base class
-  accumulates them; see ``mean_cost_seconds``).
+* ``tell(observations)`` — report measured results back as
+  :class:`~repro.core.observation.Observation` records (point, value,
+  cost_seconds, fidelity, rung, meta — one object per completed
+  measurement, the same schema the tuning service and the checkpoint
+  snapshots serialize).  Under the completion-driven tuner loop,
+  ``tell`` arrives *incrementally and in completion order*: typically
+  one observation at a time, the moment its measurement finishes, which
+  may not be the order the points were asked.  Engines must therefore
+  tolerate partial and reordered feedback; the default implementation
+  (``_tell``) forwards each observation to ``observe`` (the
+  single-point state update), which is order-free and what most engines
+  need, while engines with speculative batches (Nelder-Mead) buffer
+  results and reconcile them against their state machine.  Each
+  observation's ``cost_seconds`` is accumulated by the base class so
+  engines can become wall-clock-aware (see ``mean_cost_seconds``).
+
+  The historical keyword sprawl — ``tell(points, values, costs=...,
+  fidelities=...)`` — remains as a deprecation shim: calls that pass
+  ``values`` are converted to observations and emit a
+  ``DeprecationWarning``.  The conversion is exact (costs default to
+  0.0, fidelities to 1.0, like the old signature), so existing callers
+  keep their behavior bit-for-bit.
 
 ``ask(1, ...)`` is guaranteed to consume the engine RNG exactly like the
 historical single-point ``suggest`` did, so a sequential driver
@@ -32,11 +42,13 @@ compatibility wrapper over ``ask(1, ...)``.
 """
 from __future__ import annotations
 
+import warnings
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
 from repro.core.history import History
+from repro.core.observation import Observation
 from repro.core.space import SearchSpace
 
 
@@ -57,29 +69,65 @@ class Engine:
         """Propose up to ``n`` deduplicated candidate points."""
         raise NotImplementedError
 
-    def tell(self, points: Sequence[Dict], values: Sequence[float],
+    def tell(self, observations: Sequence[Observation],
+             values: Optional[Sequence[float]] = None,
              costs: Optional[Sequence[float]] = None,
              fidelities: Optional[Sequence[float]] = None) -> None:
-        """Report objective values for previously asked points.
+        """Report completed measurements for previously asked points.
 
+        ``observations`` is a sequence of :class:`Observation` records.
         May be called once per completed evaluation (completion order)
         or once per batch; both must leave the engine in the same state.
 
-        ``fidelities`` (multi-fidelity tuning) marks which values came
-        from partial measurements (< 1.0 = cheaper, noisier).  The base
-        implementation ignores it — engines whose state machines want
-        exact values (GA's population, NMS's simplex) treat partial
-        values as the ASHA literature does: good enough to rank on.
-        BayesOpt instead reads fidelities straight from the history as a
-        surrogate input feature, so its GP never mistakes a partial
-        value for an exact one.
-        """
-        self._record_costs(costs, len(points))
-        for p, v in zip(points, values):
-            self.observe(p, v)
+        ``Observation.fidelity`` (multi-fidelity tuning) marks values
+        that came from partial measurements (< 1.0 = cheaper, noisier).
+        The base implementation ignores it — engines whose state
+        machines want exact values (GA's population, NMS's simplex)
+        treat partial values as the ASHA literature does: good enough to
+        rank on.  BayesOpt instead reads fidelities straight from the
+        history as a surrogate input feature, so its GP never mistakes a
+        partial value for an exact one.
 
-    def _record_costs(self, costs: Optional[Sequence[float]], n: int) -> None:
-        self._cost_log.extend([0.0] * n if costs is None else costs)
+        Engines customize by overriding :meth:`_tell`, never ``tell``
+        itself: ``tell`` owns the legacy-signature shim (``tell(points,
+        values, costs=..., fidelities=...)``, deprecated) and the cost
+        accounting, so every engine sees one normalized observation
+        stream.
+        """
+        obs = self._coerce_observations(observations, values, costs,
+                                        fidelities)
+        self._cost_log.extend(o.cost_seconds for o in obs)
+        self._tell(obs)
+
+    def _tell(self, observations: Sequence[Observation]) -> None:
+        """Engine-specific state update; default forwards to ``observe``."""
+        for o in observations:
+            self.observe(o.point, o.value)
+
+    @staticmethod
+    def _coerce_observations(observations, values, costs,
+                             fidelities) -> List[Observation]:
+        if values is not None:  # legacy tell(points, values, ...) signature
+            warnings.warn(
+                "Engine.tell(points, values, costs=..., fidelities=...) is "
+                "deprecated; pass a sequence of repro.core.Observation",
+                DeprecationWarning, stacklevel=3)
+            points = observations
+            return [
+                Observation(
+                    point=dict(p), value=float(v),
+                    cost_seconds=(0.0 if costs is None else float(costs[i])),
+                    fidelity=(1.0 if fidelities is None
+                              else float(fidelities[i])))
+                for i, (p, v) in enumerate(zip(points, values))
+            ]
+        out = list(observations)
+        for o in out:
+            if not isinstance(o, Observation):
+                raise TypeError(
+                    f"tell() takes Observation records, got {type(o).__name__}"
+                    " (legacy point/value sequences must pass values= too)")
+        return out
 
     @property
     def mean_cost_seconds(self) -> float:

@@ -17,9 +17,15 @@ class Exhaustive(Engine):
 
     def ask(self, n: int, history: History) -> List[Dict]:
         batch: List[Dict] = []
-        for _ in range(n):
+        while len(batch) < n:
             try:
-                batch.append(next(self._it))
+                p = next(self._it)
             except StopIteration:
                 break  # grid exhausted; [] tells the tuner to stop cleanly
+            # skip grid points the history already holds (or that are in
+            # flight): a resumed sweep continues where the crash left off
+            # instead of burning budget re-recording memoized repeats
+            if history.lookup(p) is not None or history.pending(p):
+                continue
+            batch.append(p)
         return batch

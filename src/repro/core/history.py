@@ -26,6 +26,7 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.core.observation import Observation
 from repro.core.space import SearchSpace
 
 
@@ -78,6 +79,21 @@ class History:
         metas = metas or [None] * len(points)
         return [self.add(p, v, c, m)
                 for p, v, c, m in zip(points, values, costs, metas)]
+
+    def add_observations(self, observations: List[Observation]
+                         ) -> List[Evaluation]:
+        """Append completed :class:`Observation` records (in order)."""
+        return [self.add(o.point, o.value, o.cost_seconds, o.meta, o.fidelity)
+                for o in observations]
+
+    def observations(self) -> List[Observation]:
+        """The trace as :class:`Observation` records — the schema
+        ``Engine.tell`` takes, checkpoints snapshot, and the tuning
+        service serializes over the wire."""
+        return [Observation(point=dict(e.point), value=e.value,
+                            cost_seconds=e.cost_seconds, fidelity=e.fidelity,
+                            meta=dict(e.meta))
+                for e in self.evals]
 
     # -- in-flight bookkeeping (parallel executor) ---------------------------
     def mark_inflight(self, points: List[Dict]) -> None:

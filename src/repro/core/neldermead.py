@@ -25,7 +25,7 @@ memoizes it anyway.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -110,11 +110,9 @@ class NelderMead(Engine):
                 spec(x)
         return batch[:n]
 
-    def tell(self, points: Sequence[Dict], values: Sequence[float],
-             costs=None, fidelities=None) -> None:
-        self._record_costs(costs, len(points))
-        for p, v in zip(points, values):
-            self._told.setdefault(self.space.key(p), (p, v))
+    def _tell(self, observations) -> None:
+        for o in observations:
+            self._told.setdefault(self.space.key(o.point), (o.point, o.value))
         # drain: consume buffered results for as long as the state machine's
         # next expected point has already been measured (handles primaries
         # and speculative probes completing in any order)

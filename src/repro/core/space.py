@@ -59,6 +59,19 @@ class SearchSpace:
                 raise ValueError(d)
         return cls(dims)
 
+    def to_dicts(self) -> List[dict]:
+        """Inverse of :meth:`from_dicts` — the wire/checkpoint form the
+        tuning service serializes job search spaces as."""
+        out: List[dict] = []
+        for d in self.dims:
+            if isinstance(d, IntDim):
+                out.append({"type": "int", "name": d.name, "min": d.lo,
+                            "max": d.hi, "step": d.step})
+            else:
+                out.append({"type": "cat", "name": d.name,
+                            "choices": list(d.choices)})
+        return out
+
     # -- basics --------------------------------------------------------------
     @property
     def n_dims(self) -> int:

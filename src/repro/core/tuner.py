@@ -62,9 +62,10 @@ from __future__ import annotations
 
 import math
 import pathlib
+import threading
 import time
-from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional
+from dataclasses import asdict, dataclass, fields
+from typing import Callable, Dict, List, Optional, Union
 
 from repro.core.bayesopt import BayesOpt
 from repro.core.engine import Engine
@@ -72,6 +73,7 @@ from repro.core.exhaustive import Exhaustive
 from repro.core.genetic import GeneticAlgorithm
 from repro.core.history import History
 from repro.core.neldermead import NelderMead
+from repro.core.observation import Observation
 from repro.core.random_search import RandomSearch
 from repro.core.space import SearchSpace
 from repro.tuning.executor import EvalResult, EvaluationExecutor, PendingEval
@@ -88,40 +90,225 @@ ENGINES = {
 LOOPS = ("async", "batch")
 
 
+def _check_keys(d: dict, known, what: str) -> None:
+    """Loud validation shared by every ``from_dict``: unknown keys raise
+    a ValueError naming them (same contract ``config_from_point`` has),
+    so a malformed JSON job submission fails at the daemon's front door
+    instead of silently tuning with defaults."""
+    unknown = sorted(set(d) - set(known))
+    if unknown:
+        hints = {k: _LEGACY_FLAT_HINTS[k] for k in unknown
+                 if k in _LEGACY_FLAT_HINTS}
+        hint = ("" if not hints else
+                "; flat v1 knobs moved into sub-configs: " + ", ".join(
+                    f"{k!r} -> {v!r}" for k, v in hints.items()))
+        raise ValueError(
+            f"unknown {what} key(s) {unknown}; known: {sorted(known)}{hint}")
+
+
 @dataclass
+class ExecutorConfig:
+    """How measurements are executed (the evaluation side of the split).
+
+    ``parallelism``      worker-pool width; 1 == historical sequential loop
+    ``backend``          serial|thread|process|remote (auto: serial at
+                         parallelism=1, thread above, remote when workers set)
+    ``workers``          remote backend: host:port worker daemons
+                         (launch/worker.py); parallelism becomes the fleet's
+                         registered slot total
+    ``eval_timeout``     seconds per evaluation; -inf past it
+    ``memo_cache_path``  disk-backed cross-run memo cache
+    ``batch_size``       batch loop only: points per ask
+    """
+
+    parallelism: int = 1
+    backend: Optional[str] = None
+    workers: Optional[List[str]] = None
+    eval_timeout: Optional[float] = None
+    memo_cache_path: Optional[str] = None
+    batch_size: Optional[int] = None
+
+    def to_dict(self) -> dict:
+        return asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ExecutorConfig":
+        _check_keys(d, {f.name for f in fields(cls)}, "ExecutorConfig")
+        return cls(**d)
+
+
+@dataclass
+class MultiFidelityConfig:
+    """Successive-halving (ASHA) knobs; ``enabled=False`` = plain loop.
+
+    ``enabled``           screen candidates at partial fidelity, promote
+                          survivors rung by rung; budget then counts
+                          full-measurement *equivalents* (sum of
+                          fidelities), not evaluations
+    ``eta``               rung reduction factor (fidelity ratio + survivor
+                          fraction 1/eta between adjacent rungs)
+    ``min_fidelity``      bottom-rung fidelity floor
+    ``promote_quantile``  per-rung survivor quantile (default 1/eta)
+    ``preempt``           kill in-flight promotions whose source rung has
+                          since outclassed them (executor preempt:
+                          cancelled if unstarted, recorded normally if
+                          already running)
+    """
+
+    enabled: bool = False
+    eta: float = 3.0
+    min_fidelity: float = 0.1
+    promote_quantile: Optional[float] = None
+    preempt: bool = True
+
+    def __bool__(self) -> bool:
+        # ``if config.multi_fidelity:`` predates the sub-config and must
+        # keep meaning "is multi-fidelity on", not "is the object present"
+        return self.enabled
+
+    def to_dict(self) -> dict:
+        return asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Union[dict, bool]) -> "MultiFidelityConfig":
+        if isinstance(d, bool):  # submissions may spell it as a plain flag
+            return cls(enabled=d)
+        _check_keys(d, {f.name for f in fields(cls)}, "MultiFidelityConfig")
+        return cls(**d)
+
+
+#: where each pre-v2 flat TunerConfig knob lives now (drives from_dict's
+#: error hints and the constructor's backward-compatible keyword shim)
+_LEGACY_FLAT_HINTS = {
+    "parallelism": "executor.parallelism",
+    "batch_size": "executor.batch_size",
+    "executor_backend": "executor.backend",
+    "workers": "executor.workers",
+    "eval_timeout": "executor.eval_timeout",
+    "memo_cache_path": "executor.memo_cache_path",
+    "mf_eta": "multi_fidelity.eta",
+    "mf_min_fidelity": "multi_fidelity.min_fidelity",
+    "mf_promote_quantile": "multi_fidelity.promote_quantile",
+    "mf_preempt": "multi_fidelity.preempt",
+}
+
+
 class TunerConfig:
-    algorithm: str = "bo"
-    budget: int = 50  # paper: tuning iterations capped at 50
-    seed: int = 0
-    checkpoint_path: Optional[str] = None
-    engine_kwargs: dict = field(default_factory=dict)
-    verbose: bool = True
-    # -- parallel evaluation -------------------------------------------------
-    parallelism: int = 1  # worker-pool width; 1 == historical sequential loop
-    batch_size: Optional[int] = None  # batch loop: points per ask
-    executor_backend: Optional[str] = None  # serial|thread|process|remote
-    # (auto: serial at parallelism=1, thread above, remote when workers set)
-    workers: Optional[List[str]] = None  # remote backend: host:port worker
-    # daemons (launch/worker.py); parallelism becomes the fleet's slot total
-    eval_timeout: Optional[float] = None  # seconds per evaluation; -inf past it
-    wall_clock_budget: Optional[float] = None  # secs; unfinished work is
-    # abandoned at the deadline (forces a pool backend unless overridden)
-    loop: str = "async"  # async (completion-driven) | batch (legacy barrier)
-    memo_cache_path: Optional[str] = None  # disk-backed cross-run memo cache
-    cost_aware: bool = False  # BO: EI-per-second acquisition (prefer cheap
-    # probes, ramping in as wall_clock_budget nears exhaustion)
-    # -- multi-fidelity (successive halving) ---------------------------------
-    multi_fidelity: bool = False  # screen candidates at partial fidelity,
-    # promote survivors rung by rung (ASHA); budget then counts
-    # full-measurement *equivalents* (sum of fidelities), not evaluations
-    mf_eta: float = 3.0  # rung reduction factor (fidelity ratio + survivor
-    # fraction 1/eta between adjacent rungs)
-    mf_min_fidelity: float = 0.1  # bottom-rung fidelity floor
-    mf_promote_quantile: Optional[float] = None  # per-rung survivor
-    # quantile (default 1/eta)
-    mf_preempt: bool = True  # kill in-flight promotions whose source rung
-    # has since outclassed them (executor preempt: cancelled if unstarted,
-    # recorded normally if already running)
+    """Tuner configuration, v2: nested sub-configs instead of a flat knob
+    pile.  Execution knobs live in :class:`ExecutorConfig` (``executor=``)
+    and successive-halving knobs in :class:`MultiFidelityConfig`
+    (``multi_fidelity=``, which also accepts a plain bool).
+
+    ``from_dict``/``to_dict`` are the JSON contract the tuning service
+    validates job submissions against: unknown keys raise ``ValueError``
+    naming them (nothing is silently dropped).
+
+    The pre-v2 flat spellings (``parallelism=``, ``mf_eta=``, ...) are
+    still accepted as constructor keywords and readable/writable as
+    attributes — they delegate to the nested sub-configs, so the two
+    spellings can never disagree.  ``from_dict`` accepts only the v2
+    schema and names the new home of any flat key it rejects.
+    """
+
+    def __init__(self, algorithm: str = "bo",
+                 budget: int = 50,  # paper: tuning iterations capped at 50
+                 seed: int = 0,
+                 checkpoint_path: Optional[str] = None,
+                 engine_kwargs: Optional[dict] = None,
+                 verbose: bool = True,
+                 loop: str = "async",  # async (completion-driven) |
+                 # batch (legacy barrier)
+                 wall_clock_budget: Optional[float] = None,  # secs;
+                 # unfinished work is abandoned at the deadline (forces a
+                 # pool backend unless overridden)
+                 cost_aware: bool = False,  # BO: EI-per-second acquisition
+                 executor: Optional[ExecutorConfig] = None,
+                 multi_fidelity: Union[MultiFidelityConfig, bool] = False,
+                 **legacy):
+        self.algorithm = algorithm
+        self.budget = budget
+        self.seed = seed
+        self.checkpoint_path = checkpoint_path
+        self.engine_kwargs = dict(engine_kwargs or {})
+        self.verbose = verbose
+        self.loop = loop
+        self.wall_clock_budget = wall_clock_budget
+        self.cost_aware = cost_aware
+        self.executor = executor if executor is not None else ExecutorConfig()
+        self.multi_fidelity = (multi_fidelity if isinstance(
+            multi_fidelity, MultiFidelityConfig)
+            else MultiFidelityConfig(enabled=bool(multi_fidelity)))
+        unknown = sorted(set(legacy) - set(_LEGACY_FLAT_HINTS))
+        if unknown:
+            raise TypeError(f"TunerConfig got unexpected keyword(s) {unknown}")
+        for k, v in legacy.items():  # flat v1 spellings -> nested homes
+            setattr(self, k, v)
+
+    def to_dict(self) -> dict:
+        return {
+            "algorithm": self.algorithm, "budget": self.budget,
+            "seed": self.seed, "checkpoint_path": self.checkpoint_path,
+            "engine_kwargs": dict(self.engine_kwargs),
+            "verbose": self.verbose, "loop": self.loop,
+            "wall_clock_budget": self.wall_clock_budget,
+            "cost_aware": self.cost_aware,
+            "executor": self.executor.to_dict(),
+            "multi_fidelity": self.multi_fidelity.to_dict(),
+        }
+
+    _TOP_LEVEL_KEYS = ("algorithm", "budget", "seed", "checkpoint_path",
+                       "engine_kwargs", "verbose", "loop",
+                       "wall_clock_budget", "cost_aware", "executor",
+                       "multi_fidelity")
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "TunerConfig":
+        _check_keys(d, cls._TOP_LEVEL_KEYS, "TunerConfig")
+        kw = {k: v for k, v in d.items()
+              if k not in ("executor", "multi_fidelity")}
+        return cls(executor=ExecutorConfig.from_dict(d.get("executor") or {}),
+                   multi_fidelity=MultiFidelityConfig.from_dict(
+                       d.get("multi_fidelity", False)),
+                   **kw)
+
+    def __repr__(self) -> str:
+        return f"TunerConfig({self.to_dict()!r})"
+
+    def __eq__(self, other) -> bool:
+        return (isinstance(other, TunerConfig)
+                and self.to_dict() == other.to_dict())
+
+    # -- flat v1 attribute compatibility (delegates to the sub-configs) ------
+    parallelism = property(
+        lambda s: s.executor.parallelism,
+        lambda s, v: setattr(s.executor, "parallelism", v))
+    batch_size = property(
+        lambda s: s.executor.batch_size,
+        lambda s, v: setattr(s.executor, "batch_size", v))
+    executor_backend = property(
+        lambda s: s.executor.backend,
+        lambda s, v: setattr(s.executor, "backend", v))
+    workers = property(
+        lambda s: s.executor.workers,
+        lambda s, v: setattr(s.executor, "workers", v))
+    eval_timeout = property(
+        lambda s: s.executor.eval_timeout,
+        lambda s, v: setattr(s.executor, "eval_timeout", v))
+    memo_cache_path = property(
+        lambda s: s.executor.memo_cache_path,
+        lambda s, v: setattr(s.executor, "memo_cache_path", v))
+    mf_eta = property(
+        lambda s: s.multi_fidelity.eta,
+        lambda s, v: setattr(s.multi_fidelity, "eta", v))
+    mf_min_fidelity = property(
+        lambda s: s.multi_fidelity.min_fidelity,
+        lambda s, v: setattr(s.multi_fidelity, "min_fidelity", v))
+    mf_promote_quantile = property(
+        lambda s: s.multi_fidelity.promote_quantile,
+        lambda s, v: setattr(s.multi_fidelity, "promote_quantile", v))
+    mf_preempt = property(
+        lambda s: s.multi_fidelity.preempt,
+        lambda s, v: setattr(s.multi_fidelity, "preempt", v))
 
 
 class Tuner:
@@ -130,10 +317,16 @@ class Tuner:
         objective: Callable[[Dict], float],
         space: SearchSpace,
         config: TunerConfig = TunerConfig(),
+        executor: Optional[EvaluationExecutor] = None,
     ):
         self.objective = as_evaluator(objective)
         self.space = space
         self.config = config
+        #: cooperative cancellation (the tuning service's ``cancel_job``):
+        #: every loop checks this between completions and exits cleanly —
+        #: recorded history and checkpoints stay intact, in-flight work is
+        #: abandoned exactly like a wall-clock expiry
+        self._stop = threading.Event()
         if config.algorithm not in ENGINES:
             raise ValueError(
                 f"unknown algorithm {config.algorithm!r}; one of {sorted(ENGINES)}"
@@ -161,21 +354,27 @@ class Tuner:
         self.engine: Engine = ENGINES[config.algorithm](
             space, seed=config.seed, **engine_kwargs
         )
-        backend = config.executor_backend
-        if backend is None and config.workers:
-            backend = "remote"
-        if backend is None and config.wall_clock_budget is not None:
-            # the serial backend cannot abandon a running evaluation, so a
-            # wall-clock budget needs a pool even at parallelism=1
-            backend = "thread"
-        self.executor = EvaluationExecutor(
-            self.objective, space,
-            parallelism=config.parallelism,
-            backend=backend,
-            timeout=config.eval_timeout,
-            cache_path=config.memo_cache_path,
-            workers=config.workers,
-        )
+        if executor is not None:
+            # the tuning service multiplexes many jobs over one shared
+            # worker fleet: each job's Tuner gets a pre-built executor
+            # (wrapping the shared pool) instead of constructing its own
+            self.executor = executor
+        else:
+            backend = config.executor.backend
+            if backend is None and config.executor.workers:
+                backend = "remote"
+            if backend is None and config.wall_clock_budget is not None:
+                # the serial backend cannot abandon a running evaluation, so
+                # a wall-clock budget needs a pool even at parallelism=1
+                backend = "thread"
+            self.executor = EvaluationExecutor(
+                self.objective, space,
+                parallelism=config.executor.parallelism,
+                backend=backend,
+                timeout=config.executor.eval_timeout,
+                cache_path=config.executor.memo_cache_path,
+                workers=config.executor.workers,
+            )
         self.history = History(space)
         self.rung_scheduler = None  # set by the multi-fidelity loop
         if config.checkpoint_path and pathlib.Path(config.checkpoint_path).exists():
@@ -198,13 +397,9 @@ class Tuner:
         state machine.
         """
         loaded = History.load(path, self.space)
-        for ev in loaded.evals:
-            self.history.add(ev.point, ev.value, ev.cost_seconds, ev.meta,
-                             ev.fidelity)
-        self.engine.tell([ev.point for ev in loaded.evals],
-                         [ev.value for ev in loaded.evals],
-                         [ev.cost_seconds for ev in loaded.evals],
-                         fidelities=[ev.fidelity for ev in loaded.evals])
+        obs = loaded.observations()
+        self.history.add_observations(obs)
+        self.engine.tell(obs)
         if self.config.verbose and len(loaded):
             print(f"[tuner] resumed {len(loaded)} evaluations from {path}")
 
@@ -221,11 +416,14 @@ class Tuner:
             f"({r.cost_seconds:.1f}s) {r.point}"
         )
 
-    def _record(self, r: EvalResult, fidelity: float = 1.0) -> None:
+    def _record(self, r: EvalResult, fidelity: float = 1.0,
+                rung: Optional[int] = None) -> None:
         """tell + append + checkpoint for one completed evaluation."""
-        self.engine.tell([r.point], [r.value], [r.cost_seconds],
-                         fidelities=[fidelity])
-        self.history.add(r.point, r.value, r.cost_seconds, r.meta, fidelity)
+        obs = Observation(point=r.point, value=r.value,
+                          cost_seconds=r.cost_seconds, fidelity=fidelity,
+                          rung=rung, meta=r.meta)
+        self.engine.tell([obs])
+        self.history.add_observations([obs])
         if self.config.checkpoint_path:
             self.history.save(self.config.checkpoint_path)
         self._report(r)
@@ -236,13 +434,27 @@ class Tuner:
                   f"({wall_clock:.1f}s) exhausted at "
                   f"{len(self.history)} evaluations")
 
+    # -- cooperative cancellation (tuning service: cancel_job) ---------------
+    def request_stop(self) -> None:
+        """Ask a running ``run()`` to exit at the next completion.
+
+        Thread-safe and idempotent.  Everything recorded so far stays
+        recorded (and checkpointed); in-flight measurements are abandoned
+        unrecorded, exactly like a wall-clock expiry, so a stopped run can
+        later be resumed from its checkpoint without loss."""
+        self._stop.set()
+
+    @property
+    def stop_requested(self) -> bool:
+        return self._stop.is_set()
+
     # -- completion-driven loop (default) ------------------------------------
     def _run_async(self, budget: int, wall_clock: Optional[float]) -> History:
         t_start = time.time()
         deadline = t_start + wall_clock if wall_clock is not None else None
         outstanding: List[PendingEval] = []
         try:
-            while len(self.history) < budget:
+            while len(self.history) < budget and not self._stop.is_set():
                 if deadline is not None and time.time() >= deadline:
                     self._wall_clock_exhausted(wall_clock)
                     break
@@ -329,9 +541,10 @@ class Tuner:
             return self._run_async(budget, wall_clock)
 
         cfg = self.config
-        sched = RungScheduler(eta=cfg.mf_eta,
-                              min_fidelity=cfg.mf_min_fidelity,
-                              promote_quantile=cfg.mf_promote_quantile)
+        mf = cfg.multi_fidelity
+        sched = RungScheduler(eta=mf.eta,
+                              min_fidelity=mf.min_fidelity,
+                              promote_quantile=mf.promote_quantile)
         self.rung_scheduler = sched  # observability (bench rung stats)
         t_start = time.time()
         deadline = t_start + wall_clock if wall_clock is not None else None
@@ -364,10 +577,10 @@ class Tuner:
             spend += fid  # memo hits count too: budget is logical spend
             sched.on_result(self.space.key(done.point), done.point,
                             r.value, rung)
-            self._record(r, fidelity=fid)
+            self._record(r, fidelity=fid, rung=rung)
 
         try:
-            while spend < budget:
+            while spend < budget and not self._stop.is_set():
                 if deadline is not None and time.time() >= deadline:
                     self._wall_clock_exhausted(wall_clock)
                     break
@@ -405,7 +618,7 @@ class Tuner:
                 # value fell below the current cutoff cannot win anything
                 # by finishing (the cutoff can transiently dip when the
                 # survivor count increments — see RungScheduler.dominated)
-                if cfg.mf_preempt:
+                if mf.preempt:
                     for pend in list(outstanding):
                         if (pend.rung and not pend.preempted
                                 and not pend.done()
@@ -432,8 +645,11 @@ class Tuner:
             # dispatched slightly past the logical budget — those
             # measurements are paid for and must be recorded (exactly-once
             # accounting), never silently dropped.  A wall-clock deadline
-            # still wins: past it, next_completed abandons as usual.
-            while outstanding:
+            # still wins: past it, next_completed abandons as usual; a
+            # stop request likewise abandons the drain (cancel semantics
+            # match wall-clock expiry: in-flight work is re-measured by a
+            # resumed run, never lost from the record).
+            while outstanding and not self._stop.is_set():
                 done = self.executor.next_completed(outstanding,
                                                     deadline=deadline)
                 if done is None:
@@ -466,10 +682,11 @@ class Tuner:
         return results
 
     def _run_batch(self, budget: int, wall_clock: Optional[float]) -> History:
-        batch_size = self.config.batch_size or max(1, self.executor.parallelism)
+        batch_size = (self.config.executor.batch_size
+                      or max(1, self.executor.parallelism))
         t_start = time.time()
         deadline = t_start + wall_clock if wall_clock is not None else None
-        while len(self.history) < budget:
+        while len(self.history) < budget and not self._stop.is_set():
             if deadline is not None and time.time() >= deadline:
                 self._wall_clock_exhausted(wall_clock)
                 break
@@ -489,12 +706,12 @@ class Tuner:
             # never measured, so it enters neither the engine nor history
             done = [(p, r) for p, r in zip(points, results) if r is not None]
             if done:
-                pts, rs = [p for p, _ in done], [r for _, r in done]
-                self.engine.tell(pts, [r.value for r in rs],
-                                 [r.cost_seconds for r in rs])
-                self.history.add_batch(
-                    pts, [r.value for r in rs],
-                    [r.cost_seconds for r in rs], [r.meta for r in rs])
+                rs = [r for _, r in done]
+                obs = [Observation(point=p, value=r.value,
+                                   cost_seconds=r.cost_seconds, meta=r.meta)
+                       for p, r in done]
+                self.engine.tell(obs)
+                self.history.add_observations(obs)
                 if self.config.checkpoint_path:
                     self.history.save(self.config.checkpoint_path)
                 if self.config.verbose:
@@ -508,7 +725,7 @@ class Tuner:
         wall_clock = (wall_clock if wall_clock is not None
                       else self.config.wall_clock_budget)
         if (wall_clock is not None and self.executor.backend == "serial"
-                and self.config.executor_backend is None):
+                and self.config.executor.backend is None):
             # a wall-clock budget supplied at run() time needs the same
             # pool fallback __init__ applies for a configured one: the
             # serial backend cannot abandon a running evaluation.  The
@@ -516,8 +733,9 @@ class Tuner:
             old = self.executor
             self.executor = EvaluationExecutor(
                 self.objective, self.space,
-                parallelism=self.config.parallelism, backend="thread",
-                timeout=self.config.eval_timeout, cache=old.cache)
+                parallelism=self.config.executor.parallelism,
+                backend="thread",
+                timeout=self.config.executor.eval_timeout, cache=old.cache)
             old.close()
         if self.config.multi_fidelity:
             return self._run_multi_fidelity(budget, wall_clock)

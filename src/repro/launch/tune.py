@@ -59,6 +59,11 @@ workers, never recorded as failed configurations.  The wire protocol
 (length-prefixed JSON over TCP: register, heartbeat, task, result) is
 documented in ``repro.tuning.remote``; any objective can be served with
 the generic ``python -m repro.launch.worker`` daemon.
+
+Tuning as a service: ``--submit-to host:port`` ships the run as a *job*
+to a long-lived ``launch/service.py`` daemon (which multiplexes many
+jobs over one shared fleet, fair-share scheduled, crash-resumable) and
+streams its progress here; ``--detach`` just prints the job id.
 """
 import argparse
 import math
@@ -68,6 +73,55 @@ from repro.configs import get_config
 from repro.core import SearchSpace, Tuner, TunerConfig
 from repro.tuning.evaluator import RooflineEvaluator
 from repro.tuning.parameters import BASELINE, backend_space, config_from_point
+
+
+def _submit(args, space):
+    """--submit-to: ship the run to a service daemon, stream its progress."""
+    from repro.launch.service import ServiceClient, print_status
+    from repro.tuning.protocol import JobSpec
+
+    config = TunerConfig(
+        algorithm=args.algo, budget=args.budget, seed=args.seed,
+        loop=args.loop, cost_aware=args.cost_aware,
+        wall_clock_budget=args.wall_clock,
+        parallelism=args.parallelism,
+        eval_timeout=args.eval_timeout,
+        memo_cache_path=args.memo_cache,
+        multi_fidelity=args.multi_fidelity,
+        mf_eta=args.mf_eta, mf_min_fidelity=args.mf_min_fidelity,
+        mf_preempt=not args.no_mf_preempt,
+    ).to_dict()
+    spec = JobSpec(
+        space=space.to_dicts(), config=config,
+        name=args.job_name or f"{args.arch} x {args.shape} x {args.algo}",
+        objective=args.job_objective)
+    with ServiceClient(args.submit_to) as client:
+        job_id = client.submit(spec)
+        print(f"[tune] submitted {job_id} to {args.submit_to} "
+              f"(service slots={client.slots})")
+        if args.detach:
+            print(f"[tune] watch with: python -m repro.launch.service "
+                  f"--connect {args.submit_to} --status {job_id} --watch")
+            return job_id
+
+        last = {"n": -1}
+
+        def report(st):
+            if st.get("n_evals", 0) != last["n"]:
+                last["n"] = st.get("n_evals", 0)
+                print_status(st)
+
+        final = client.wait(job_id, on_status=report, poll_s=0.5)
+        print_status(final)
+        best = final.get("best")
+        if best:
+            print(f"[tune] best throughput {best['value']:.4g} tok/s at "
+                  f"{best['point']}")
+            print(f"[tune] backend config: "
+                  f"{config_from_point(best['point'], BASELINE)}")
+        elif final.get("state") == "failed":
+            raise SystemExit(f"[tune] job failed: {final.get('error')}")
+        return final
 
 
 def main(argv=None):
@@ -141,9 +195,28 @@ def main(argv=None):
     ap.add_argument("--no-mf-preempt", action="store_true",
                     help="disable preemption of in-flight promotions whose "
                          "source rung has since outclassed them")
+    ap.add_argument("--submit-to", default=None, metavar="HOST:PORT",
+                    help="thin-client mode: submit this tuning run as a job "
+                         "to a running launch/service.py daemon instead of "
+                         "tuning locally, then stream its progress (the "
+                         "daemon owns the measurement substrate — a remote "
+                         "worker fleet or its --objective)")
+    ap.add_argument("--job-name", default=None,
+                    help="--submit-to: label for the job (default: "
+                         "arch x shape x algo)")
+    ap.add_argument("--job-objective", default=None,
+                    help="--submit-to: module:factory() objective spec the "
+                         "daemon should measure for this job (local-"
+                         "measurement daemons only)")
+    ap.add_argument("--detach", action="store_true",
+                    help="--submit-to: print the job id and exit instead of "
+                         "streaming progress")
     args = ap.parse_args(argv)
     if args.cost_aware and args.algo != "bo":
         ap.error("--cost-aware requires --algo bo")
+    if args.submit_to and args.serve_worker:
+        ap.error("--submit-to (thin client) and --serve-worker (measurement "
+                 "daemon) are different processes")
     workers = ([w.strip() for w in args.workers.split(",") if w.strip()]
                if args.workers else None)
     if args.executor_backend == "remote" and not workers:
@@ -153,6 +226,12 @@ def main(argv=None):
     shape_kind = "train" if args.shape.startswith("train") else "serve"
     space = SearchSpace.from_dicts(backend_space(cfg, kind=shape_kind))
     print(f"[tune] space: {space.names} (grid {space.grid_size():,})")
+
+    if args.submit_to:
+        # thin client: the daemon measures; this process only submits the
+        # (space, config) job and renders progress.  No evaluator — and
+        # none of its compile state — is built here.
+        return _submit(args, space)
 
     evaluator = RooflineEvaluator(
         args.arch, args.shape, multi_pod=args.multi_pod, cache_path=args.cache

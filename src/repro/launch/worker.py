@@ -36,22 +36,53 @@ from __future__ import annotations
 import argparse
 import importlib
 import os
+import traceback
 
 from repro.tuning.remote import DEFAULT_HEARTBEAT_S, WorkerServer
 
 
 def resolve_objective(spec: str):
-    """``module:attr`` or ``module:factory()`` -> the objective object."""
+    """``module:attr`` or ``module:factory()`` -> the objective object.
+
+    Every failure mode raises with a message that names the spec and
+    the precise step that broke (malformed spec, unimportable module,
+    missing attribute, raising factory) — this text travels to the
+    tuner in the register reply when the daemon serves in error mode,
+    so the *submitting* side sees why its fleet cannot measure.
+    """
     mod_name, sep, attr = spec.partition(":")
-    if not sep or not attr:
+    if not sep or not attr or not mod_name:
         raise ValueError(
             f"objective spec {spec!r} is not module:attr (append () to "
             "call a zero-arg factory, e.g. pkg.mod:make_objective())")
     call = attr.endswith("()")
     if call:
         attr = attr[:-2]
-    obj = getattr(importlib.import_module(mod_name), attr)
-    return obj() if call else obj
+    if not attr.isidentifier():
+        raise ValueError(
+            f"objective spec {spec!r}: {attr!r} is not a plain attribute "
+            "name (only zero-arg factory calls are supported — spell "
+            "arguments into a wrapper factory instead)")
+    try:
+        module = importlib.import_module(mod_name)
+    except ImportError as e:
+        raise ValueError(
+            f"objective spec {spec!r}: cannot import module "
+            f"{mod_name!r}: {e!r}") from e
+    try:
+        obj = getattr(module, attr)
+    except AttributeError:
+        raise ValueError(
+            f"objective spec {spec!r}: module {mod_name!r} has no "
+            f"attribute {attr!r}") from None
+    if not call:
+        return obj
+    try:
+        return obj()
+    except Exception as e:
+        raise ValueError(
+            f"objective spec {spec!r}: factory {mod_name}:{attr} raised "
+            f"{e!r}") from e
 
 
 def main(argv=None):
@@ -71,13 +102,40 @@ def main(argv=None):
     ap.add_argument("--heartbeat", type=float, default=DEFAULT_HEARTBEAT_S,
                     help="seconds between heartbeats (the tuner declares "
                          "this worker dead after 3 missed ones)")
+    ap.add_argument("--serve-startup-error", action="store_true",
+                    help="when the objective fails to resolve, keep serving "
+                         "in error mode (register replies carry the error, "
+                         "so connecting tuners fail loudly with the real "
+                         "cause) instead of exiting")
     args = ap.parse_args(argv)
 
-    server = WorkerServer(resolve_objective(args.objective),
+    # resolve at STARTUP, loudly: a bad --objective must never look like
+    # a healthy worker.  The default is to crash the daemon with the full
+    # traceback; --serve-startup-error keeps the port open and ships the
+    # error to every tuner that registers, for fleets managed by
+    # supervisors where a crash loop would just look like "unreachable".
+    objective, startup_error = None, None
+    try:
+        objective = resolve_objective(args.objective)
+    except ValueError as e:
+        print(f"[worker] OBJECTIVE FAILED AT STARTUP: {e}", flush=True)
+        traceback.print_exc()
+        if not args.serve_startup_error:
+            raise
+        startup_error = str(e)
+
+    server = WorkerServer(objective,
                           host=args.host, port=args.port,
-                          slots=args.slots, heartbeat_s=args.heartbeat)
-    print(f"[worker] pid={os.getpid()} serving {args.objective!r} on "
-          f"{server.host}:{server.port} (slots={server.slots})", flush=True)
+                          slots=args.slots, heartbeat_s=args.heartbeat,
+                          startup_error=startup_error)
+    if startup_error is not None:
+        print(f"[worker] pid={os.getpid()} serving ERROR MODE on "
+              f"{server.host}:{server.port} — registering tuners will be "
+              "told the startup error", flush=True)
+    else:
+        print(f"[worker] pid={os.getpid()} serving {args.objective!r} on "
+              f"{server.host}:{server.port} (slots={server.slots})",
+              flush=True)
     try:
         server.serve_forever()
     except KeyboardInterrupt:

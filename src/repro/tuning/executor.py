@@ -359,14 +359,28 @@ class EvaluationExecutor:
         cache: Optional[MemoCache] = None,
         cache_path: Optional[str] = None,
         workers: Optional[Sequence[str]] = None,
+        pool=None,
     ):
         self.objective = as_evaluator(objective)
         self.space = space
         self._parallelism = max(1, int(parallelism))
+        #: fair-share throttle: when set (the tuning service's slot
+        #: governor), ``parallelism`` reports at most this many slots,
+        #: so a multi-tenant driver keeps its in-flight window inside
+        #: its share of a shared pool.  Dispatched work is never
+        #: revoked by lowering it — the window shrinks as results land.
+        self.slot_cap: Optional[int] = None
+        # a shared pool (multi-tenant service: N executors over one
+        # worker fleet / thread pool) is injected pre-built; this
+        # executor then never shuts it down
+        self._owns_pool = pool is None
         # a timeout needs a pool to enforce it mid-run: the serial backend
         # can only flag an overrun after the objective returns
         if backend is None:
-            if workers:
+            if pool is not None:
+                backend = ("remote" if isinstance(pool, RemoteWorkerPool)
+                           else "thread")
+            elif workers:
                 backend = "remote"
             else:
                 backend = ("serial"
@@ -376,10 +390,10 @@ class EvaluationExecutor:
         if self.backend not in BACKENDS:
             raise ValueError(
                 f"unknown executor backend {self.backend!r}; one of {BACKENDS}")
-        if self.backend == "remote" and not workers:
+        if self.backend == "remote" and not workers and pool is None:
             raise ValueError(
                 "backend='remote' needs workers=['host:port', ...] "
-                "(launch/worker.py daemons)")
+                "(launch/worker.py daemons) or a shared pool=")
         if workers and self.backend != "remote":
             raise ValueError(
                 f"workers= is only meaningful with backend='remote' "
@@ -400,10 +414,10 @@ class EvaluationExecutor:
             self.cache = MemoCache(store=store, autoflush=False)
         if store is not None:
             self.cache.load_store(space)
-        self._pool = None
+        self._pool = pool
         self._inflight: Dict = {}  # grid key -> future currently measuring it
         self._seq = 0  # monotonic submission index (orders completions)
-        if self.backend == "remote":
+        if self.backend == "remote" and self._pool is None:
             # connect eagerly: fail fast on an unreachable fleet, and the
             # drivers size their in-flight window off the fleet's actual
             # capacity (registered worker slots), not a local guess
@@ -415,10 +429,15 @@ class EvaluationExecutor:
         """Measurement capacity the driver should keep in flight.  For
         the remote backend this is the *live* fleet's slot total — it
         shrinks when a worker dies, so the driver stops overfilling the
-        queue and starving tasks into their per-eval deadlines."""
+        queue and starving tasks into their per-eval deadlines.  A
+        ``slot_cap`` (fair-share governor) caps either backend."""
         if self.backend == "remote" and self._pool is not None:
-            return max(1, self._pool.parallelism)
-        return self._parallelism
+            base = max(1, self._pool.parallelism)
+        else:
+            base = self._parallelism
+        if self.slot_cap is not None:
+            base = max(1, min(base, int(self.slot_cap)))
+        return base
 
     def _get_pool(self):
         if self._pool is None:
@@ -803,7 +822,8 @@ class EvaluationExecutor:
     def close(self) -> None:
         self.cache.flush()  # nothing buffered may outlive the executor
         if self._pool is not None:
-            self._pool.shutdown(wait=False, cancel_futures=True)
+            if self._owns_pool:  # a shared pool outlives its tenants
+                self._pool.shutdown(wait=False, cancel_futures=True)
             self._pool = None
         self._inflight.clear()
 

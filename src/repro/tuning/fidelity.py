@@ -223,3 +223,20 @@ class RungScheduler:
              "promoted": s.n_promoted, "preempted": s.n_preempted}
             for r, s in enumerate(self.rungs)
         ]
+
+    def snapshot(self) -> List[dict]:
+        """Full per-rung *state* (stats + result/promotion sets), in
+        JSON-able form.  The tuning service ships this over the wire in
+        ``job_status`` replies, and the resume tests pin it equal between
+        a crashed-and-replayed scheduler and a never-crashed one.  Keys
+        (grid-key tuples) are rendered as lists for JSON."""
+        return [
+            dict(row,
+                 results=sorted(([list(k), v] for k, v
+                                 in self.rungs[row["rung"]].results),
+                                key=repr),
+                 promoted=sorted((list(k) for k
+                                  in self.rungs[row["rung"]].promoted),
+                                 key=repr))
+            for row in self.stats()
+        ]

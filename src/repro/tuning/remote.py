@@ -10,23 +10,28 @@ executor contract — ``submit`` / ``next_completed`` / ``preempt``,
 fidelity/rung tagging, per-evaluation deadlines, exactly-once recording
 — works over the wire unchanged.
 
-Wire protocol (version 1)
--------------------------
+Wire protocol
+-------------
 
-Every message is a **length-prefixed JSON object**: a 4-byte big-endian
-unsigned length followed by that many bytes of UTF-8 JSON.  ``NaN`` and
-``±Infinity`` use the Python ``json`` literals (both ends are this
-codebase), so ``-inf`` failure scores survive the round trip.
+Framing and version negotiation live in ``repro.tuning.protocol``
+(length-prefixed JSON; the hello advertises ``max_protocol`` so v2
+tuners and v1 workers interoperate — see that module's docstring).
+This module re-exports ``send_msg``/``recv_msg``/``parse_address`` for
+compatibility with existing imports.
 
 The tuner is the TCP *client*; each worker daemon is a *server* (the
 driver is handed ``host:port`` addresses, so workers sit behind plain
 listening sockets — no rendezvous service needed).  Per connection:
 
-* handshake — tuner sends ``{"type": "hello", "protocol": 1}``; the
-  worker **registers** with ``{"type": "register", "protocol": 1,
-  "slots": n, "heartbeat_s": h, "pid": ..., "host": ...}``.  ``slots``
-  is how many concurrent measurements the worker runs; the pool's
-  ``parallelism`` is the fleet-wide sum.
+* handshake — tuner sends ``{"type": "hello", "protocol": 1,
+  "max_protocol": 2}``; the worker **registers** with ``{"type":
+  "register", "protocol": v, "slots": n, "heartbeat_s": h, "pid": ...,
+  "host": ...}`` where ``v`` is the negotiated version.  ``slots`` is
+  how many concurrent measurements the worker runs; the pool's
+  ``parallelism`` is the fleet-wide sum.  A worker whose objective
+  failed to build at startup registers with ``"error": "<traceback
+  summary>"`` and zero slots — the pool raises ``ConnectionError``
+  naming the import error instead of silently running a broken fleet.
 * tasks — tuner sends ``{"type": "task", "id": i, "point": {...},
   "fidelity": f | null, "timeout": t | null}``; the worker *pulls* it
   into its measurement thread pool, runs ``run_objective`` (the exact
@@ -76,59 +81,20 @@ from __future__ import annotations
 import json
 import os
 import socket
-import struct
 import threading
 import time
 from collections import deque
 from concurrent.futures import Future
 from typing import Dict, List, Optional, Sequence
 
-PROTOCOL_VERSION = 1
-_HEADER = struct.Struct(">I")
-# corruption guard, not a capacity plan: a frame is one point/result
-MAX_FRAME_BYTES = 64 << 20
-DEFAULT_HEARTBEAT_S = 2.0
+from repro.tuning import protocol as _proto
+from repro.tuning.protocol import (  # noqa: F401  (re-exported for compat)
+    DEFAULT_HEARTBEAT_S, MAX_FRAME_BYTES, PROTOCOL_V1, PROTOCOL_V2,
+    SUPPORTED_PROTOCOLS, parse_address, recv_msg, send_msg,
+)
 
-
-# ---------------------------------------------------------------------------
-# framing
-# ---------------------------------------------------------------------------
-
-def send_msg(sock: socket.socket, obj: dict) -> None:
-    """Send one length-prefixed JSON message."""
-    data = json.dumps(obj, allow_nan=True).encode("utf-8")
-    sock.sendall(_HEADER.pack(len(data)) + data)
-
-
-def _recv_exact(sock: socket.socket, n: int) -> bytes:
-    buf = bytearray()
-    while len(buf) < n:
-        chunk = sock.recv(n - len(buf))
-        if not chunk:
-            raise ConnectionError("peer closed the connection mid-frame")
-        buf += chunk
-    return bytes(buf)
-
-
-def recv_msg(sock: socket.socket) -> dict:
-    """Receive one length-prefixed JSON message (blocking)."""
-    (length,) = _HEADER.unpack(_recv_exact(sock, _HEADER.size))
-    if length > MAX_FRAME_BYTES:
-        raise ValueError(
-            f"frame of {length} bytes exceeds the {MAX_FRAME_BYTES}-byte "
-            "protocol limit (corrupt stream?)")
-    msg = json.loads(_recv_exact(sock, length).decode("utf-8"))
-    if not isinstance(msg, dict):
-        raise ValueError(f"protocol messages are JSON objects, got {type(msg)}")
-    return msg
-
-
-def parse_address(addr: str) -> tuple:
-    """``"host:port"`` -> ``(host, port)`` with a helpful error."""
-    host, sep, port = addr.rpartition(":")
-    if not sep or not host:
-        raise ValueError(f"worker address {addr!r} is not host:port")
-    return host, int(port)
+#: historical alias — the version-1 wire format this module debuted with.
+PROTOCOL_VERSION = PROTOCOL_V1
 
 
 # ---------------------------------------------------------------------------
@@ -151,9 +117,10 @@ class _RemoteTask:
 
 class _WorkerConn:
     __slots__ = ("address", "sock", "slots", "heartbeat_timeout", "inflight",
-                 "alive", "last_seen", "pid", "hostname")
+                 "alive", "last_seen", "pid", "hostname", "protocol")
 
-    def __init__(self, address, sock, slots, heartbeat_timeout, pid, hostname):
+    def __init__(self, address, sock, slots, heartbeat_timeout, pid, hostname,
+                 protocol=PROTOCOL_V1):
         self.address = address
         self.sock = sock
         self.slots = slots
@@ -163,6 +130,7 @@ class _WorkerConn:
         self.last_seen = time.time()
         self.pid = pid
         self.hostname = hostname
+        self.protocol = protocol  # negotiated wire version for this session
 
 
 class RemoteWorkerPool:
@@ -226,24 +194,33 @@ class RemoteWorkerPool:
         WorkerServer._enable_keepalive(sock)
         sock.settimeout(10.0)  # handshake only; task reads block forever
         try:
-            send_msg(sock, {"type": "hello", "protocol": PROTOCOL_VERSION})
+            send_msg(sock, _proto.hello())
             reg = recv_msg(sock)
         except (OSError, ValueError) as e:
             sock.close()
             raise ConnectionError(
                 f"handshake with worker {address} failed: {e!r}") from None
         if reg.get("type") != "register" \
-                or reg.get("protocol") != PROTOCOL_VERSION:
+                or reg.get("protocol") not in SUPPORTED_PROTOCOLS:
             sock.close()
             raise ConnectionError(
                 f"worker {address} spoke {reg.get('type')!r} protocol "
                 f"{reg.get('protocol')!r}, expected register/"
-                f"{PROTOCOL_VERSION}")
+                f"{SUPPORTED_PROTOCOLS}")
+        if reg.get("error"):
+            # the worker came up but its objective did not (bad
+            # --objective spec, import failure): fail the pool loudly
+            # with the worker's own explanation instead of dispatching
+            # to a fleet that can only answer -inf
+            sock.close()
+            raise ConnectionError(
+                f"worker {address} failed at startup: {reg['error']}")
         sock.settimeout(None)
         hb = float(reg.get("heartbeat_s") or DEFAULT_HEARTBEAT_S)
         return _WorkerConn(address, sock, max(1, int(reg.get("slots", 1))),
                            max(3.0 * hb, 1.0), reg.get("pid"),
-                           reg.get("host"))
+                           reg.get("host"),
+                           protocol=int(reg.get("protocol", PROTOCOL_V1)))
 
     # -- pool surface (what EvaluationExecutor calls) ------------------------
     @property
@@ -258,6 +235,16 @@ class RemoteWorkerPool:
     def alive_workers(self) -> int:
         with self._lock:
             return sum(1 for w in self._workers if w.alive)
+
+    def fleet_health(self) -> List[dict]:
+        """Per-worker snapshot (the service's ``job_status`` fleet view)."""
+        now = time.time()
+        with self._lock:
+            return [{"address": w.address, "alive": w.alive,
+                     "slots": w.slots, "inflight": len(w.inflight),
+                     "protocol": w.protocol, "pid": w.pid, "host": w.hostname,
+                     "seconds_since_seen": round(now - w.last_seen, 3)}
+                    for w in self._workers]
 
     def submit(self, fn, objective, point: Dict,
                fidelity: Optional[float] = None) -> Future:
@@ -450,15 +437,24 @@ class WorkerServer:
     """
 
     def __init__(self, objective, host: str = "127.0.0.1", port: int = 0,
-                 slots: int = 1, heartbeat_s: float = DEFAULT_HEARTBEAT_S):
+                 slots: int = 1, heartbeat_s: float = DEFAULT_HEARTBEAT_S,
+                 startup_error: Optional[str] = None,
+                 protocol_ceiling: int = PROTOCOL_V2):
         from repro.tuning.executor import run_objective
         from repro.tuning.objective import as_evaluator
 
         # bound eagerly, on the main thread: the first task must pay
         # measurement cost only, and an import failure must crash the
-        # daemon at startup, not vanish inside a measurement thread
+        # daemon at startup, not vanish inside a measurement thread.
+        # A daemon whose objective could NOT be built still serves in
+        # error mode (startup_error set): it registers carrying the
+        # import error so the *tuner* fails loudly with the real cause,
+        # instead of the fleet looking merely unreachable.
         self._run_objective = run_objective
-        self.objective = as_evaluator(objective)
+        self.startup_error = startup_error
+        self.protocol_ceiling = int(protocol_ceiling)
+        self.objective = (None if startup_error is not None
+                          else as_evaluator(objective))
         self.slots = max(1, int(slots))
         self.heartbeat_s = float(heartbeat_s)
         self.handshake_timeout_s = 10.0
@@ -520,16 +516,23 @@ class WorkerServer:
         # allowed to be quiet, and its death closes the socket.
         conn.settimeout(self.handshake_timeout_s)
         hello = recv_msg(conn)
-        if hello.get("type") != "hello" \
-                or hello.get("protocol") != PROTOCOL_VERSION:
+        version = _proto.negotiate(hello, ceiling=self.protocol_ceiling)
+        if version is None:
             send_msg(conn, {"type": "error",
                             "error": f"unsupported hello {hello!r}"})
             return
-        send_msg(conn, {
-            "type": "register", "protocol": PROTOCOL_VERSION,
+        register = {
+            "type": "register", "protocol": version,
             "slots": self.slots, "heartbeat_s": self.heartbeat_s,
             "pid": os.getpid(), "host": socket.gethostname(),
-        })
+        }
+        if self.startup_error is not None:
+            # error mode: tell the tuner WHY this host cannot measure,
+            # then end the session (no slots are usable anyway)
+            register.update(slots=0, error=self.startup_error)
+            send_msg(conn, register)
+            return
+        send_msg(conn, register)
         conn.settimeout(None)
         self.sessions_served += 1
         send_lock = threading.Lock()
