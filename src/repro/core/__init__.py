@@ -20,7 +20,7 @@ milliseconds, never an XLA recompile.  ``TunerConfig(cost_aware=True)``
 switches BO to EI-per-second, trading improvement against a
 per-candidate predicted measurement cost and sharpening the preference
 for cheap probes as ``wall_clock_budget`` nears exhaustion."""
-from repro.core.bayesopt import BayesOpt
+from repro.core.bayesopt import BayesOpt, TransferPrior
 from repro.core.engine import Engine
 from repro.core.exhaustive import Exhaustive
 from repro.core.genetic import GeneticAlgorithm
@@ -31,11 +31,11 @@ from repro.core.observation import Observation
 from repro.core.random_search import RandomSearch
 from repro.core.space import CatDim, IntDim, SearchSpace
 from repro.core.tuner import (ENGINES, ExecutorConfig, MultiFidelityConfig,
-                              Tuner, TunerConfig)
+                              TransferConfig, Tuner, TunerConfig)
 
 __all__ = [
     "BayesOpt", "CatDim", "ENGINES", "Engine", "ExecutorConfig",
     "Exhaustive", "GaussianProcess", "GeneticAlgorithm", "History", "IntDim",
     "MultiFidelityConfig", "NelderMead", "Observation", "RandomSearch",
-    "SearchSpace", "Tuner", "TunerConfig",
+    "SearchSpace", "TransferConfig", "TransferPrior", "Tuner", "TunerConfig",
 ]

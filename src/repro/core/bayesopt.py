@@ -55,6 +55,7 @@ from __future__ import annotations
 
 import math
 import time
+from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
 import numpy as np
@@ -88,6 +89,85 @@ def _norm_pdf(z):
     return np.exp(-0.5 * z * z) / math.sqrt(2 * math.pi)
 
 
+def _pearson(pred, actual) -> Optional[float]:
+    p = np.asarray(pred, np.float64)
+    a = np.asarray(actual, np.float64)
+    if p.size != a.size or p.size < 2:
+        return None
+    if float(p.std()) == 0.0 or float(a.std()) == 0.0:
+        return None
+    return float(np.corrcoef(p, a)[0, 1])
+
+
+@dataclass
+class TransferPrior:
+    """Prior observations from neighbor workloads (transfer warm-start).
+
+    Built from :meth:`TuningCorpus.prior_observations` rows: encoded
+    points + values + per-row workload distances.  The engine seeds its
+    surrogate with these rows under inflated observation noise
+    (:meth:`noise_scale` — proportional to workload distance, growing
+    quadratically as real observations accumulate so the prior fades),
+    and :meth:`predict` gives the cheap Nadaraya-Watson estimate the
+    negative-transfer guard compares against the first real
+    measurements.
+    """
+
+    points: List[Dict]
+    X: np.ndarray           # encoded (k, d), no fidelity column
+    y: np.ndarray           # (k,)
+    distances: np.ndarray   # (k,) workload distance per row, in [0, 1]
+    fidelities: np.ndarray = field(default=None)  # (k,), default all-1
+
+    def __post_init__(self):
+        self.X = np.asarray(self.X, np.float64)
+        self.y = np.asarray(self.y, np.float64)
+        self.distances = np.asarray(self.distances, np.float64)
+        if self.fidelities is None:
+            self.fidelities = np.ones_like(self.y)
+        else:
+            self.fidelities = np.asarray(self.fidelities, np.float64)
+
+    @classmethod
+    def from_rows(cls, space: SearchSpace, rows: List[Dict]) -> "TransferPrior":
+        """Build from corpus ``prior_observations`` rows."""
+        pts = [dict(r["point"]) for r in rows]
+        return cls(
+            points=pts,
+            X=space.encode_many(pts),
+            y=np.asarray([r["value"] for r in rows], np.float64),
+            distances=np.asarray([r.get("distance", 0.0) for r in rows],
+                                 np.float64),
+            fidelities=np.asarray([r.get("fidelity", 1.0) for r in rows],
+                                  np.float64),
+        )
+
+    def __len__(self) -> int:
+        return int(self.y.shape[0])
+
+    def best_point(self) -> Dict:
+        return dict(self.points[int(np.argmax(self.y))])
+
+    def predict(self, Xq: np.ndarray) -> np.ndarray:
+        """Nadaraya-Watson estimate at encoded query points (RBF weights
+        in the unit-cube encoding) — cheap enough for guard checks and
+        candidate pre-filtering without a GP fit."""
+        Xq = np.atleast_2d(np.asarray(Xq, np.float64))
+        d2 = ((Xq[:, None, :] - self.X[None, :, :]) ** 2).sum(-1)
+        w = np.exp(-d2 / (2.0 * 0.25 ** 2))
+        den = w.sum(axis=1)
+        num = w @ self.y
+        return np.where(den > 1e-12, num / np.maximum(den, 1e-12),
+                        float(self.y.mean()))
+
+    def noise_scale(self, n_real: int, decay: int) -> np.ndarray:
+        """Per-row observation-noise inflation (>= 1): base inflation
+        proportional to workload distance, times a quadratic ramp in the
+        real-observation count so prior rows fade as evidence arrives."""
+        ramp = 1.0 + 9.0 * (n_real / max(decay, 1)) ** 2
+        return (1.0 + 3.0 * self.distances) * ramp
+
+
 class BayesOpt(Engine):
     name = "bo"
 
@@ -105,6 +185,9 @@ class BayesOpt(Engine):
         warm_start: bool = True,
         warm_start_min_n: int = 64,
         fidelity_feature: bool = False,
+        transfer_prior: Optional[TransferPrior] = None,
+        transfer_decay: int = 24,
+        transfer_guard_n: int = 3,
     ):
         super().__init__(space, seed)
         self.n_init = min(n_init, max(2, space.grid_size() // 2))
@@ -122,6 +205,16 @@ class BayesOpt(Engine):
         #: mistaken for exact values.  Off by default: the single-fidelity
         #: suggestion trace stays bit-for-bit identical.
         self.fidelity_feature = fidelity_feature
+        #: transfer warm-start: prior observations from neighbor workloads
+        #: (None = cold start, the historical bit-for-bit path)
+        self.transfer_prior = (transfer_prior if transfer_prior is not None
+                               and len(transfer_prior) > 0 else None)
+        self.transfer_decay = transfer_decay
+        self.transfer_guard_n = transfer_guard_n
+        self._prior_dropped = False   # negative-transfer guard tripped/retired
+        self._prior_checked = False   # guard runs once
+        self._prior_best_point = (self.transfer_prior.best_point()
+                                  if self.transfer_prior is not None else None)
         self._init_points = None
         self._gp: Optional[GaussianProcess] = None
         self._cost_gp: Optional[GaussianProcess] = None
@@ -152,9 +245,16 @@ class BayesOpt(Engine):
         # fidelity mode the incumbent must be a full measurement — a
         # partial value's optimistic bias would center exploitation on
         # measurement noise (same guard as y_best in _ask)
-        best = history.best(full_fidelity_only=self.fidelity_feature and bool(
-            np.any((history.fidelities() >= 1.0)
-                   & np.isfinite(history.values())))).point
+        if (self._prior_best_point is not None
+                and not np.isfinite(history.values()).any()):
+            # transfer mode before the first finite real measurement:
+            # exploit around the neighbor workload's best (the no-prior
+            # path never reaches here without >= 2 finite values)
+            best = self._prior_best_point
+        else:
+            best = history.best(full_fidelity_only=self.fidelity_feature and bool(
+                np.any((history.fidelities() >= 1.0)
+                       & np.isfinite(history.values())))).point
         for _ in range(self.max_candidates // 2):
             cands.append(self.space.perturb(self.rng, best, radius=2))
         seen_keys = set()
@@ -168,21 +268,24 @@ class BayesOpt(Engine):
         return out, self.space.encode_many(out)
 
     # -- surrogate maintenance ------------------------------------------------
-    def _fit_surrogate(self, X: np.ndarray, y: np.ndarray) -> GaussianProcess:
+    def _fit_surrogate(self, X: np.ndarray, y: np.ndarray,
+                       noise_scale: Optional[np.ndarray] = None
+                       ) -> GaussianProcess:
         """Refit the persistent GP, warm-starting from the previous fit.
 
         Warm-start policy: cold refits below ``warm_start_min_n`` rows
         (cheap under compile-once shapes, keeps the small-history
         suggestion trace bit-for-bit stable), warm refinement above
         (each Adam step pays a Cholesky there, so 30 warm steps beat
-        120 cold ones).
+        120 cold ones).  ``noise_scale`` (transfer mode) inflates
+        per-row observation noise for prior-workload rows.
         """
         if self._gp is None:
             self._gp = GaussianProcess(kind=self.kernel)
         params0 = (self._gp.params
                    if self.warm_start and X.shape[0] >= self.warm_start_min_n
                    else None)
-        self._gp.fit(X, y, params0=params0)
+        self._gp.fit(X, y, params0=params0, noise_scale=noise_scale)
         return self._gp
 
     def _fit_cost_model(self, X: np.ndarray,
@@ -260,7 +363,96 @@ class BayesOpt(Engine):
             self.ask_seconds.append(time.perf_counter() - t0)
             self.jit_misses.append(gp_module.jit_cache_entries() - entries0)
 
+    # -- transfer warm-start --------------------------------------------------
+    def _active_prior(self, history: History) -> Optional[TransferPrior]:
+        """The transfer prior if it should still shape this ask, else None.
+
+        The prior retires after ``transfer_decay`` real observations (by
+        then its inflated noise has drowned it anyway), and is dropped
+        permanently — negative-transfer guard — if its predictions
+        anti-correlate with the first ``transfer_guard_n`` finite real
+        measurements.
+        """
+        if self.transfer_prior is None or self._prior_dropped:
+            return None
+        if len(history) >= self.transfer_decay:
+            self._prior_dropped = True
+            return None
+        if not self._prior_checked:
+            X, y = history.encoded()
+            finite = np.isfinite(y)
+            if int(finite.sum()) >= self.transfer_guard_n:
+                self._prior_checked = True
+                agree = _pearson(self.transfer_prior.predict(X[finite]),
+                                 y[finite])
+                if agree is not None and agree < 0.0:
+                    self._prior_dropped = True
+                    return None
+        return self.transfer_prior
+
+    def _ask_transfer(self, n: int, history: History,
+                      prior: TransferPrior) -> List[Dict]:
+        """Ask with the surrogate seeded by prior-workload observations.
+
+        No LHS init phase: the prior already covers the space, which is
+        where the warm start's measurement savings come from.  Prior rows
+        enter the GP under inflated per-row noise; the cost model stays
+        off while the prior is active (prior rows carry no cost on this
+        hardware, and the cost GP must share the value GP's padded
+        training inputs).
+        """
+        batch: List[Dict] = []
+        keys = set()
+
+        def emit(point: Dict) -> None:
+            keys.add(self.space.key(point))
+            batch.append(point)
+
+        n_real = len(history)
+        if n_real:
+            X, y = history.encoded()
+        else:
+            X = np.zeros((0, prior.X.shape[1]))
+            y = np.zeros((0,))
+        finite = np.isfinite(y)
+        # failed real configs get the worst value on hand (pessimism)
+        floor = float(y[finite].min()) if finite.any() else float(prior.y.min())
+        y_real = np.where(finite, y, floor)
+        Xall = np.concatenate([prior.X, X], axis=0)
+        yall = np.concatenate([prior.y, y_real])
+        noise = np.concatenate([prior.noise_scale(n_real, self.transfer_decay),
+                                np.ones(y_real.shape[0])])
+        if self.fidelity_feature:
+            fid = np.concatenate([prior.fidelities, history.fidelities()]
+                                 if n_real else [prior.fidelities])
+            Xall = np.concatenate([Xall, fid[:, None]], axis=1)
+
+        gp = self._fit_surrogate(Xall, yall, noise_scale=noise)
+        cands, Xs = self._candidates(history)
+        if self.fidelity_feature:
+            Xs = np.concatenate([Xs, np.ones((Xs.shape[0], 1))], axis=1)
+        # incumbent: best finite real measurement, else the prior's best
+        y_best = (float(y[finite].max()) if finite.any()
+                  else float(prior.y.max()))
+        order = self._rank(gp, Xs, y_best, None)
+
+        for i in order:
+            if len(batch) == n:
+                break
+            c = cands[int(i)]
+            k = self.space.key(c)
+            if k in keys or history.seen(c) or history.pending(c):
+                continue
+            emit(dict(c))
+        while len(batch) < n:  # candidate set exhausted: random fill
+            emit(self._unseen(history, self.space.sample(self.rng, 1)[0],
+                              exclude=keys))
+        return batch
+
     def _ask(self, n: int, history: History) -> List[Dict]:
+        prior = self._active_prior(history)
+        if prior is not None:
+            return self._ask_transfer(n, history, prior)
         if self._init_points is None:
             self._init_points = self.space.sample_lhs(self.rng, self.n_init)
         batch: List[Dict] = []

@@ -55,6 +55,13 @@ from repro.core.space import SearchSpace
 class Engine:
     name = "base"
 
+    #: whether the tuner's transfer pre-filter may over-ask this engine and
+    #: measure only the top-ranked fraction of the batch.  Safe for engines
+    #: whose asks are independent suggestions (random/GA/BO/exhaustive);
+    #: engines with speculative-batch state machines (Nelder-Mead) require
+    #: every asked point to eventually be told and must opt out.
+    prefilter_safe = True
+
     def __init__(self, space: SearchSpace, seed: int = 0):
         self.space = space
         self.rng = np.random.default_rng(seed)

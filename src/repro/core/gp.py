@@ -107,10 +107,15 @@ def _masked_gram(kind: str, X, mask, ls, sigma2, noise):
     return K * m2 + jnp.diag(noise * mask + (1.0 - mask))
 
 
-def _chol_alpha(params: Dict, X, y, mask, kind: str):
+def _chol_alpha(params: Dict, X, y, mask, kind: str, noise_row=None):
     ls = jnp.exp(params["log_ls"])
     sigma2 = jnp.exp(params["log_sigma2"])
     noise = jnp.exp(params["log_noise"]) + _JITTER
+    if noise_row is not None:
+        # per-row observation-noise scale (>= 1), used by transfer warm
+        # starts to down-weight prior-workload rows; ``None`` resolves at
+        # trace time, so the no-transfer path compiles the identical jaxpr
+        noise = noise * noise_row
     K = _masked_gram(kind, X, mask, ls, sigma2, noise)
     Lc = jnp.linalg.cholesky(K)
     alpha = jax.scipy.linalg.cho_solve((Lc, True), y * mask)
@@ -118,9 +123,9 @@ def _chol_alpha(params: Dict, X, y, mask, kind: str):
 
 
 @partial(jax.jit, static_argnames=("kind",))
-def _neg_mll(params: Dict, X, y, mask, kind: str):
+def _neg_mll(params: Dict, X, y, mask, kind: str, noise_row=None):
     n = jnp.sum(mask)
-    Lc, alpha, _, _ = _chol_alpha(params, X, y, mask, kind)
+    Lc, alpha, _, _ = _chol_alpha(params, X, y, mask, kind, noise_row)
     mll = (
         -0.5 * (y * mask) @ alpha
         - jnp.sum(mask * jnp.log(jnp.diagonal(Lc)))
@@ -130,12 +135,13 @@ def _neg_mll(params: Dict, X, y, mask, kind: str):
 
 
 @partial(jax.jit, static_argnames=("kind", "steps"))
-def _fit(params0: Dict, X, y, mask, kind: str, steps: int, lr: float):
+def _fit(params0: Dict, X, y, mask, kind: str, steps: int, lr: float,
+         noise_row=None):
     grad = jax.grad(_neg_mll)
 
     def body(carry, _):
         params, m, v, t = carry
-        g = grad(params, X, y, mask, kind)
+        g = grad(params, X, y, mask, kind, noise_row)
         t = t + 1
         m = jax.tree_util.tree_map(lambda m_, g_: 0.9 * m_ + 0.1 * g_, m, g)
         v = jax.tree_util.tree_map(lambda v_, g_: 0.999 * v_ + 0.001 * g_ * g_, v, g)
@@ -159,9 +165,9 @@ def _fit(params0: Dict, X, y, mask, kind: str, steps: int, lr: float):
     return params
 
 
-def _posterior_core(params: Dict, X, y, mask, Xs, kind: str):
+def _posterior_core(params: Dict, X, y, mask, Xs, kind: str, noise_row=None):
     """Masked posterior on padded shapes; exact on the live prefix."""
-    Lc, alpha, ls, sigma2 = _chol_alpha(params, X, y, mask, kind)
+    Lc, alpha, ls, sigma2 = _chol_alpha(params, X, y, mask, kind, noise_row)
     Ks = kernel_fn(kind, X, Xs, ls, sigma2) * mask[:, None]  # (n, m)
     mu = Ks.T @ alpha
     v = jax.scipy.linalg.solve_triangular(Lc, Ks, lower=True)
@@ -177,7 +183,8 @@ def _acq_rank(params: Dict, X, y, mask, Xs, cand_mask,
               y_mean, y_std, y_best, kappa, eps,
               cost_params: Dict, cost_y, cost_mean, cost_std,
               cost_alpha, mean_cost,
-              kind: str, acquisition: str, cost_aware: bool):
+              kind: str, acquisition: str, cost_aware: bool,
+              noise_row=None, cost_noise_row=None):
     """Fused posterior + acquisition + ranking on padded shapes.
 
     Returns ``(order, acq)``: candidate indices sorted by descending
@@ -185,7 +192,7 @@ def _acq_rank(params: Dict, X, y, mask, Xs, cand_mask,
     de-standardized acquisition values.  The (n, m) cross-covariance and
     the triangular solves stay on device.
     """
-    mu_s, var_s = _posterior_core(params, X, y, mask, Xs, kind)
+    mu_s, var_s = _posterior_core(params, X, y, mask, Xs, kind, noise_row)
     mu = mu_s * y_std + y_mean
     sigma = jnp.sqrt(var_s) * y_std
     if acquisition == "ucb":
@@ -209,7 +216,8 @@ def _acq_rank(params: Dict, X, y, mask, Xs, cand_mask,
         # acquisition mass by the predicted measurement cost, relative to
         # the mean observed cost so the units cancel; ``cost_alpha`` in
         # [0, 1] ramps the trade-off in as the wall clock runs out.
-        cmu_s, _ = _posterior_core(cost_params, X, cost_y, mask, Xs, kind)
+        cmu_s, _ = _posterior_core(cost_params, X, cost_y, mask, Xs, kind,
+                                   cost_noise_row)
         log_cost = cmu_s * cost_std + cost_mean
         rel = jnp.exp(log_cost) / jnp.maximum(mean_cost, 1e-9)
         rel = jnp.clip(rel, 1e-2, 1e2) ** cost_alpha
@@ -260,6 +268,7 @@ class GaussianProcess:
         self._X = None       # padded (B, d)
         self._y = None       # padded (B,), standardized
         self._mask = None    # (B,) float prefix mask
+        self._noise_row = None  # padded (B,) per-row noise scale, or None
         self._y_mean = 0.0
         self._y_std = 1.0
         #: observability: did the most recent fit() warm-start from params0?
@@ -279,13 +288,25 @@ class GaussianProcess:
         return Xp, yp, mask
 
     def fit(self, X: np.ndarray, y: np.ndarray,
-            params0: Optional[Dict] = None) -> "GaussianProcess":
+            params0: Optional[Dict] = None,
+            noise_scale: Optional[np.ndarray] = None) -> "GaussianProcess":
         dtype = jnp.float64 if jax.config.jax_enable_x64 else jnp.float32
         yn = np.asarray(y, np.float64)
         self._y_mean = float(yn.mean())
         self._y_std = float(yn.std() + 1e-9)
         y_std = (yn - self._y_mean) / self._y_std
         Xp, yp, mask = self._padded(np.asarray(X), y_std, dtype)
+        if noise_scale is None:
+            nrow = None
+        else:
+            # per-row observation-noise scale (transfer warm starts inflate
+            # prior-workload rows); padded rows get 1.0, which the mask
+            # makes irrelevant anyway
+            ns = np.asarray(noise_scale, np.float64)
+            padded = np.ones(int(Xp.shape[0]), np.float64)
+            padded[: ns.shape[0]] = ns
+            nrow = jnp.asarray(padded, dtype)
+        self._noise_row = nrow
         d = Xp.shape[1]
         cold = {
             "log_ls": jnp.full((d,), np.log(0.3), dtype),
@@ -296,17 +317,17 @@ class GaussianProcess:
         self.last_fit_was_warm = warm
         init = params0 if warm else cold
         steps = self.warm_steps if warm else self.fit_steps
-        fitted = _fit(init, Xp, yp, mask, self.kind, steps, self.lr)
+        fitted = _fit(init, Xp, yp, mask, self.kind, steps, self.lr, nrow)
         # fp32 robustness: if the fitted hyperparameters make the Cholesky
         # blow up (near-singular K), fall back to safe defaults with a
         # larger noise floor; a diverged warm start additionally gets a
         # full cold refit before giving up.
-        nll = _neg_mll(fitted, Xp, yp, mask, self.kind)
+        nll = _neg_mll(fitted, Xp, yp, mask, self.kind, nrow)
         if not bool(jnp.isfinite(nll)):
             if warm:
                 fitted = _fit(cold, Xp, yp, mask, self.kind,
-                              self.fit_steps, self.lr)
-                nll = _neg_mll(fitted, Xp, yp, mask, self.kind)
+                              self.fit_steps, self.lr, nrow)
+                nll = _neg_mll(fitted, Xp, yp, mask, self.kind, nrow)
             if not bool(jnp.isfinite(nll)):
                 fitted = {
                     "log_ls": jnp.full_like(cold["log_ls"], np.log(0.3)),
@@ -330,14 +351,14 @@ class GaussianProcess:
         assert self._params is not None, "fit first"
         Xsp, _, m = self._padded_candidates(Xs)
         mu, var = _posterior(self._params, self._X, self._y, self._mask,
-                             Xsp, self.kind)
+                             Xsp, self.kind, self._noise_row)
         mu, var = np.asarray(mu)[:m], np.asarray(var)[:m]
         if not np.isfinite(mu).all():  # last-resort refit with big noise
             safe = dict(self._params)
             safe["log_noise"] = jnp.full_like(self._params["log_noise"],
                                               np.log(1e-1))
             mu, var = _posterior(safe, self._X, self._y, self._mask,
-                                 Xsp, self.kind)
+                                 Xsp, self.kind, self._noise_row)
             mu, var = np.asarray(mu)[:m], np.asarray(var)[:m]
         mu = np.nan_to_num(mu, nan=0.0) * self._y_std + self._y_mean
         sigma = np.sqrt(np.clip(np.nan_to_num(var, nan=1.0), 1e-12, None)) * self._y_std
@@ -363,9 +384,11 @@ class GaussianProcess:
             assert cost_gp._y.shape == self._y.shape, \
                 "cost GP must be fit on the same (padded) training inputs"
             cparams, cy = cost_gp._params, cost_gp._y
+            cnrow = cost_gp._noise_row
             cmean, cstd = cost_gp._y_mean, cost_gp._y_std
         else:  # same-shape dummies keep the traced signature stable
             cparams, cy = self._params, self._y
+            cnrow = None
             cmean, cstd = 0.0, 1.0
         dt = self._X.dtype
 
@@ -377,7 +400,8 @@ class GaussianProcess:
                 jnp.asarray(eps, dt),
                 cparams, cy, jnp.asarray(cmean, dt), jnp.asarray(cstd, dt),
                 jnp.asarray(cost_alpha, dt), jnp.asarray(mean_cost, dt),
-                self.kind, acquisition, cost_aware)
+                self.kind, acquisition, cost_aware,
+                self._noise_row, cnrow)
             return np.asarray(order), np.asarray(acq)[:m]
 
         order, acq = rank(self._params)

@@ -38,6 +38,9 @@ ALPHA, GAMMA, RHO, SIGMA = 1.0, 2.0, 0.5, 0.5
 
 class NelderMead(Engine):
     name = "nms"
+    # the speculative-batch state machine expects every asked probe to be
+    # told eventually; dropping probes (transfer pre-filter) would wedge it
+    prefilter_safe = False
 
     def __init__(self, space: SearchSpace, seed: int = 0, init_radius: float = 0.25):
         super().__init__(space, seed)

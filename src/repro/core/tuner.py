@@ -67,7 +67,9 @@ import time
 from dataclasses import asdict, dataclass, fields
 from typing import Callable, Dict, List, Optional, Union
 
-from repro.core.bayesopt import BayesOpt
+import numpy as np
+
+from repro.core.bayesopt import BayesOpt, TransferPrior
 from repro.core.engine import Engine
 from repro.core.exhaustive import Exhaustive
 from repro.core.genetic import GeneticAlgorithm
@@ -177,6 +179,57 @@ class MultiFidelityConfig:
         return cls(**d)
 
 
+@dataclass
+class TransferConfig:
+    """Transfer learning across tuning jobs (see ``repro.tuning.corpus``).
+
+    ``corpus_path``    persistent observation-corpus JSON file; ``None``
+                       disables transfer entirely (the bit-for-bit path)
+    ``job_id``         provenance id stamped on records this job writes
+                       (auto-generated when unset)
+    ``warm_start``     seed the BO surrogate with neighbor-workload rows
+                       under inflated, decaying observation noise
+    ``prefilter``      over-ask the engine and measure only the
+                       top-``keep_fraction`` of candidates by
+                       corpus-predicted score (all engines that declare
+                       ``prefilter_safe``)
+    ``k_neighbors``    nearest neighbor workloads consulted
+    ``max_prior``      max prior rows seeded into the surrogate
+    ``max_distance``   workload-distance cutoff: beyond it a workload is
+                       not a neighbor and contributes nothing
+    ``keep_fraction``  fraction of an over-asked batch actually measured
+    ``decay_evals``    real observations after which the prior retires
+    ``guard_evals``    finite real observations before the
+                       negative-transfer agreement check runs
+    """
+
+    corpus_path: Optional[str] = None
+    job_id: Optional[str] = None
+    warm_start: bool = True
+    prefilter: bool = True
+    k_neighbors: int = 3
+    max_prior: int = 32
+    max_distance: float = 0.35
+    keep_fraction: float = 0.4
+    decay_evals: int = 24
+    guard_evals: int = 3
+
+    def __bool__(self) -> bool:
+        # ``if config.transfer:`` means "is transfer configured", matching
+        # the MultiFidelityConfig convention
+        return self.corpus_path is not None
+
+    def to_dict(self) -> dict:
+        return asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Optional[dict]) -> "TransferConfig":
+        if d is None:
+            return cls()
+        _check_keys(d, {f.name for f in fields(cls)}, "TransferConfig")
+        return cls(**d)
+
+
 #: where each pre-v2 flat TunerConfig knob lives now (drives from_dict's
 #: error hints and the constructor's backward-compatible keyword shim)
 _LEGACY_FLAT_HINTS = {
@@ -224,6 +277,7 @@ class TunerConfig:
                  cost_aware: bool = False,  # BO: EI-per-second acquisition
                  executor: Optional[ExecutorConfig] = None,
                  multi_fidelity: Union[MultiFidelityConfig, bool] = False,
+                 transfer: Optional[TransferConfig] = None,
                  **legacy):
         self.algorithm = algorithm
         self.budget = budget
@@ -238,6 +292,7 @@ class TunerConfig:
         self.multi_fidelity = (multi_fidelity if isinstance(
             multi_fidelity, MultiFidelityConfig)
             else MultiFidelityConfig(enabled=bool(multi_fidelity)))
+        self.transfer = transfer if transfer is not None else TransferConfig()
         unknown = sorted(set(legacy) - set(_LEGACY_FLAT_HINTS))
         if unknown:
             raise TypeError(f"TunerConfig got unexpected keyword(s) {unknown}")
@@ -254,21 +309,23 @@ class TunerConfig:
             "cost_aware": self.cost_aware,
             "executor": self.executor.to_dict(),
             "multi_fidelity": self.multi_fidelity.to_dict(),
+            "transfer": self.transfer.to_dict(),
         }
 
     _TOP_LEVEL_KEYS = ("algorithm", "budget", "seed", "checkpoint_path",
                        "engine_kwargs", "verbose", "loop",
                        "wall_clock_budget", "cost_aware", "executor",
-                       "multi_fidelity")
+                       "multi_fidelity", "transfer")
 
     @classmethod
     def from_dict(cls, d: dict) -> "TunerConfig":
         _check_keys(d, cls._TOP_LEVEL_KEYS, "TunerConfig")
         kw = {k: v for k, v in d.items()
-              if k not in ("executor", "multi_fidelity")}
+              if k not in ("executor", "multi_fidelity", "transfer")}
         return cls(executor=ExecutorConfig.from_dict(d.get("executor") or {}),
                    multi_fidelity=MultiFidelityConfig.from_dict(
                        d.get("multi_fidelity", False)),
+                   transfer=TransferConfig.from_dict(d.get("transfer")),
                    **kw)
 
     def __repr__(self) -> str:
@@ -351,14 +408,52 @@ class Tuner:
                 # partial observations enter the surrogate with a fidelity
                 # feature, never as exact values
                 engine_kwargs.setdefault("fidelity_feature", True)
+        # -- transfer learning: resolve the corpus + prior BEFORE the engine
+        # is constructed, so the warm-start prior can enter its kwargs.  No
+        # corpus configured -> corpus is None, nothing below runs, and the
+        # engine/executor construction is byte-identical to the historical
+        # path.
+        tr = config.transfer
+        corpus = (getattr(executor, "corpus", None)
+                  if executor is not None else None)
+        if corpus is None and tr:
+            from repro.tuning.corpus import TuningCorpus
+            corpus = TuningCorpus(tr.corpus_path, job_id=tr.job_id)
+        self.corpus = corpus
+        self._transfer_prior: Optional[TransferPrior] = None
+        if corpus is not None:
+            corpus.describe_job(self.objective, space)
+            rows = corpus.prior_observations(
+                space, corpus.descriptor["features"],
+                k=tr.k_neighbors, max_rows=tr.max_prior,
+                max_distance=tr.max_distance)
+            if rows:
+                self._transfer_prior = TransferPrior.from_rows(space, rows)
+                if tr.warm_start and config.algorithm == "bo":
+                    engine_kwargs.setdefault("transfer_prior",
+                                             self._transfer_prior)
+                    engine_kwargs.setdefault("transfer_decay", tr.decay_evals)
+                    engine_kwargs.setdefault("transfer_guard_n",
+                                             tr.guard_evals)
         self.engine: Engine = ENGINES[config.algorithm](
             space, seed=config.seed, **engine_kwargs
         )
+        # corpus pre-filter (all prefilter_safe engines): guard state is
+        # independent of the BO-internal prior guard
+        self._prefilter_on = (bool(tr) and tr.prefilter
+                              and self._transfer_prior is not None
+                              and getattr(ENGINES[config.algorithm],
+                                          "prefilter_safe", True))
+        self._prefilter_checked = False
         if executor is not None:
             # the tuning service multiplexes many jobs over one shared
             # worker fleet: each job's Tuner gets a pre-built executor
             # (wrapping the shared pool) instead of constructing its own
             self.executor = executor
+            if corpus is not None and getattr(executor, "corpus", None) is None:
+                # service-injected executors are per-job: attach the
+                # corpus so their finalized measurements are recorded
+                executor.corpus = corpus
         else:
             backend = config.executor.backend
             if backend is None and config.executor.workers:
@@ -374,6 +469,7 @@ class Tuner:
                 timeout=config.executor.eval_timeout,
                 cache_path=config.executor.memo_cache_path,
                 workers=config.executor.workers,
+                corpus=corpus,
             )
         self.history = History(space)
         self.rung_scheduler = None  # set by the multi-fidelity loop
@@ -428,6 +524,46 @@ class Tuner:
             self.history.save(self.config.checkpoint_path)
         self._report(r)
 
+    def _ask_filtered(self, want: int, history: History) -> List[Dict]:
+        """Engine ask, routed through the corpus pre-filter when active.
+
+        With transfer configured and a prior available, the engine is
+        over-asked by ``1/keep_fraction`` and only the candidates the
+        neighbor-workload observations rank highest are measured — the
+        corpus-trained pre-filter that works for *every* engine that
+        declares ``prefilter_safe`` (AutoTVM-style: spend measurements
+        only on candidates history says are promising).  Inactive (no
+        corpus, unsafe engine, prior retired or guard-tripped), this is
+        exactly ``engine.ask``.
+        """
+        tr = self.config.transfer
+        prior = self._transfer_prior
+        if (not self._prefilter_on or prior is None or want <= 0
+                or len(history) >= tr.decay_evals):
+            return self.engine.ask(want, history)
+        # negative-transfer guard, independent of BO's internal one: stop
+        # filtering permanently if the prior mis-ranks real measurements
+        if not self._prefilter_checked:
+            X, y = history.encoded()
+            finite = np.isfinite(y)
+            if int(finite.sum()) >= tr.guard_evals:
+                self._prefilter_checked = True
+                from repro.tuning.corpus import prediction_agreement
+                agree = prediction_agreement(prior.predict(X[finite]),
+                                             y[finite])
+                if agree is not None and agree < 0.0:
+                    self._prefilter_on = False
+                    return self.engine.ask(want, history)
+        ask_n = max(want, math.ceil(want / max(tr.keep_fraction, 1e-9)))
+        cands = self.engine.ask(ask_n, history)
+        if len(cands) <= want:
+            return cands
+        scores = prior.predict(self.space.encode_many(cands))
+        top = np.argsort(-scores, kind="stable")[:want]
+        # keep the engine's own proposal order among survivors (for BO
+        # that is acquisition-descending)
+        return [cands[i] for i in sorted(top.tolist())]
+
     def _wall_clock_exhausted(self, wall_clock: Optional[float]) -> None:
         if self.config.verbose:
             print(f"[tuner:{self.engine.name}] wall-clock budget "
@@ -469,7 +605,7 @@ class Tuner:
                     if deadline is not None:  # budget pressure -> cost-aware BO
                         self.engine.note_budget(
                             max(0.0, (deadline - time.time()) / wall_clock))
-                    points = self.engine.ask(want, self.history)
+                    points = self._ask_filtered(want, self.history)
                     asked_any = bool(points)
                     submitted = []
                     for p in points[:want]:
@@ -604,7 +740,7 @@ class Tuner:
                     if deadline is not None:
                         self.engine.note_budget(
                             max(0.0, (deadline - time.time()) / wall_clock))
-                    points = self.engine.ask(capacity, self.history)
+                    points = self._ask_filtered(capacity, self.history)
                     for p in points[:capacity]:
                         if self.history.seen(p) or self.history.pending(p):
                             continue  # known at some rung / already in flight
@@ -693,7 +829,7 @@ class Tuner:
             if deadline is not None:  # budget pressure -> cost-aware BO
                 self.engine.note_budget(
                     max(0.0, (deadline - time.time()) / wall_clock))
-            points = self.engine.ask(
+            points = self._ask_filtered(
                 min(batch_size, budget - len(self.history)), self.history)
             if not points:
                 break  # engine has nothing left to propose
@@ -735,7 +871,8 @@ class Tuner:
                 self.objective, self.space,
                 parallelism=self.config.executor.parallelism,
                 backend="thread",
-                timeout=self.config.executor.eval_timeout, cache=old.cache)
+                timeout=self.config.executor.eval_timeout, cache=old.cache,
+                corpus=getattr(old, "corpus", None))
             old.close()
         if self.config.multi_fidelity:
             return self._run_multi_fidelity(budget, wall_clock)

@@ -117,13 +117,18 @@ class TuningService:
                  workers: Optional[List[str]] = None, parallelism: int = 4,
                  host: str = "127.0.0.1", port: int = 0,
                  eval_timeout: Optional[float] = None, verbose: bool = True,
-                 rebalance_s: float = 0.5):
+                 rebalance_s: float = 0.5, corpus_path=None):
         from repro.checkpoint.checkpointer import JsonCheckpointer
 
         self._JsonCheckpointer = JsonCheckpointer
         self.state_dir = pathlib.Path(state_dir)
         self.jobs_dir = self.state_dir / "jobs"
         self.jobs_dir.mkdir(parents=True, exist_ok=True)
+        # transfer-learning observation corpus: every job's completed
+        # evaluations are recorded here, and later jobs on neighboring
+        # workloads warm-start from it (default: <state_dir>/corpus.json)
+        self.corpus_path = (pathlib.Path(corpus_path) if corpus_path
+                            else self.state_dir / "corpus.json")
         self.verbose = verbose
         self.eval_timeout = eval_timeout
         self._lock = threading.RLock()
@@ -304,7 +309,7 @@ class TuningService:
         job.thread.start()
 
     def _run_job(self, job: _Job) -> None:
-        from repro.core import SearchSpace, Tuner, TunerConfig
+        from repro.core import SearchSpace, TransferConfig, Tuner, TunerConfig
         from repro.tuning.executor import EvaluationExecutor
 
         try:
@@ -317,6 +322,14 @@ class TuningService:
             cfg.verbose = False
             cfg.executor.workers = None
             cfg.executor.backend = self._backend
+            # every job records into (and may warm-start from) the
+            # daemon's shared observation corpus, unless the submitter
+            # pointed the job at a corpus of its own
+            if self.corpus_path is not None and not cfg.transfer:
+                cfg.transfer = TransferConfig(
+                    corpus_path=str(self.corpus_path))
+            if cfg.transfer and not cfg.transfer.job_id:
+                cfg.transfer.job_id = job.job_id
             objective = (self._resolve(job.spec.objective)
                          or self._default_objective
                          or _remote_standin)
@@ -363,6 +376,9 @@ class TuningService:
                 tuner, job.tuner = job.tuner, None
             if tuner is not None:
                 tuner.executor.cache.flush()
+                corpus = getattr(tuner.executor, "corpus", None)
+                if corpus is not None:
+                    corpus.flush()
             job.ckpt.save(job.doc())
             self._rebalance()
             self._log(f"{job.job_id} -> {job.state} "
@@ -712,6 +728,12 @@ def main(argv=None):
                          "width")
     ap.add_argument("--eval-timeout", type=float, default=None,
                     help="daemon: default seconds per measurement")
+    ap.add_argument("--corpus", default=None,
+                    help="daemon: transfer-learning observation corpus "
+                         "shared by all jobs (default: "
+                         "<state-dir>/corpus.json); jobs record every "
+                         "completed evaluation here and warm-start from "
+                         "neighboring workloads")
     ap.add_argument("--quiet", action="store_true",
                     help="daemon: suppress progress logging")
     ap.add_argument("--connect", default=None,
@@ -732,7 +754,8 @@ def main(argv=None):
         service = TuningService(
             args.state_dir, objective=args.objective, workers=workers,
             parallelism=args.parallelism, host=args.host, port=args.port,
-            eval_timeout=args.eval_timeout, verbose=not args.quiet)
+            eval_timeout=args.eval_timeout, verbose=not args.quiet,
+            corpus_path=args.corpus)
         service.serve_forever()
         return service
 

@@ -70,9 +70,18 @@ import math
 import pathlib
 
 from repro.configs import get_config
-from repro.core import SearchSpace, Tuner, TunerConfig
+from repro.core import SearchSpace, TransferConfig, Tuner, TunerConfig
 from repro.tuning.evaluator import RooflineEvaluator
 from repro.tuning.parameters import BASELINE, backend_space, config_from_point
+
+
+def _transfer_config(args):
+    """--corpus: record into / warm-start from an observation corpus."""
+    if not args.corpus:
+        return None
+    return TransferConfig(
+        corpus_path=args.corpus,
+        job_id=f"{args.arch}:{args.shape}:{args.algo}:seed{args.seed}")
 
 
 def _submit(args, space):
@@ -90,6 +99,7 @@ def _submit(args, space):
         multi_fidelity=args.multi_fidelity,
         mf_eta=args.mf_eta, mf_min_fidelity=args.mf_min_fidelity,
         mf_preempt=not args.no_mf_preempt,
+        transfer=_transfer_config(args),
     ).to_dict()
     spec = JobSpec(
         space=space.to_dicts(), config=config,
@@ -171,6 +181,12 @@ def main(argv=None):
     ap.add_argument("--memo-cache", default=None,
                     help="disk-backed memo cache of evaluated points "
                          "(atomic + file-locked; shared across runs/hosts)")
+    ap.add_argument("--corpus", default=None,
+                    help="persistent observation corpus for transfer "
+                         "learning: record every completed evaluation, "
+                         "warm-start the BO surrogate from neighboring "
+                         "workloads recorded by earlier runs, and pre-"
+                         "filter candidate batches against them")
     ap.add_argument("--cost-aware", action="store_true",
                     help="BO only: EI-per-second acquisition — trade "
                          "expected improvement against predicted measurement "
@@ -270,7 +286,8 @@ def main(argv=None):
                     mf_eta=args.mf_eta,
                     mf_min_fidelity=args.mf_min_fidelity,
                     mf_preempt=not args.no_mf_preempt,
-                    workers=workers),
+                    workers=workers,
+                    transfer=_transfer_config(args)),
     )
     history = tuner.run()
     tuner.close()

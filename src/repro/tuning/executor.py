@@ -108,6 +108,7 @@ if TYPE_CHECKING:  # annotation-only: a runtime import would pull in all of
 from repro.tuning.cache import (
     CacheStore,
     NullCacheStore,
+    _round_trip_violation,
     ensure_serializable,
     open_store,
 )
@@ -169,8 +170,23 @@ def run_objective(objective: Evaluator, point: Dict,
 
 
 def _store_key(key) -> str:
-    """Stable string form of a grid key for the on-disk store."""
-    return json.dumps(list(key), default=str)
+    """Stable string form of a grid key for the on-disk store.
+
+    Keys serialize as JSON lists (tuples converted explicitly, so the
+    fidelity marker stays parseable by ``MemoCache._stored_fidelity``)
+    and serialization is **strict**: a component that is not canonical
+    JSON — a numpy scalar, an arbitrary object — raises ``TypeError``
+    naming it.  The historical ``default=str`` fallback silently
+    stringified such components, producing store keys that could collide
+    with (or never round-trip back to) the honest spelling.
+    """
+    parts = [list(c) if isinstance(c, tuple) else c for c in key]
+    bad = _round_trip_violation(parts, path="grid key")
+    if bad:
+        raise TypeError(
+            f"grid key {tuple(key)!r} is not strictly JSON-serializable: "
+            f"{bad}; refusing to persist under a default=str spelling")
+    return json.dumps(parts)
 
 
 _FID_TAG = "__fidelity__"
@@ -360,6 +376,7 @@ class EvaluationExecutor:
         cache_path: Optional[str] = None,
         workers: Optional[Sequence[str]] = None,
         pool=None,
+        corpus=None,
     ):
         self.objective = as_evaluator(objective)
         self.space = space
@@ -414,6 +431,13 @@ class EvaluationExecutor:
             self.cache = MemoCache(store=store, autoflush=False)
         if store is not None:
             self.cache.load_store(space)
+        #: optional cross-job observation corpus (transfer learning,
+        #: ``repro.tuning.corpus``): every finalized real measurement is
+        #: appended under this job's workload descriptor and flushed with
+        #: the memo cache
+        self.corpus = corpus
+        if corpus is not None and corpus.descriptor is None:
+            corpus.describe_job(self.objective, space)
         self._pool = pool
         self._inflight: Dict = {}  # grid key -> future currently measuring it
         self._seq = 0  # monotonic submission index (orders completions)
@@ -446,6 +470,32 @@ class EvaluationExecutor:
             elif self.backend == "process":
                 self._pool = ProcessPoolExecutor(max_workers=self.parallelism)
         return self._pool
+
+    def _corpus_add(self, result: EvalResult,
+                    fidelity: Optional[float] = None) -> None:
+        """Append one finalized real measurement to the transfer corpus.
+
+        Memoized aliases, preempted placeholders, and timeout verdicts
+        are not measurements of this workload (same judgment calls as
+        memo persistence) and are skipped; failed configurations
+        (``-inf``) are recorded — "this config crashes here" transfers.
+        """
+        if self.corpus is None:
+            return
+        m = result.meta
+        if m.get("memoized") or m.get("preempted") or m.get("timeout"):
+            return
+        fid = m.get("fidelity")
+        if fid is None:
+            fid = 1.0 if fidelity is None else float(fidelity)
+        self.corpus.add(result.point, result.value, result.cost_seconds,
+                        float(fid))
+
+    def _flush(self) -> None:
+        """One store write for the memo cache and the corpus alike."""
+        self.cache.flush()
+        if self.corpus is not None:
+            self.corpus.flush()
 
     # -- completion-driven protocol ------------------------------------------
     def submit(self, points: Sequence[Dict],
@@ -512,6 +562,7 @@ class EvaluationExecutor:
                                        result=self._run_one(p, fidelity)))
                 r = out[-1].result()
                 self.cache.put(key, r, persist=not r.meta.get("timeout"))
+                self._corpus_add(r, fidelity)
                 continue
             fut = self._get_pool().submit(run_objective, self.objective, p,
                                           fidelity)
@@ -519,7 +570,7 @@ class EvaluationExecutor:
             out.append(PendingEval(dict(p), key, self._seq, future=fut,
                                    deadline=eval_deadline,
                                    fidelity=fidelity, rung=rung))
-        self.cache.flush()  # serial-path results + harvested strays
+        self._flush()  # serial-path results + harvested strays
         return out
 
     def _harvest(self, key, future) -> None:
@@ -528,7 +579,9 @@ class EvaluationExecutor:
         if self._inflight.get(key) is future:
             del self._inflight[key]
         point = dict(zip(self.space.names, grid_key_of(key)))
-        self.cache.put(key, EvalResult(point, value, secs, meta))
+        res = EvalResult(point, value, secs, meta)
+        self.cache.put(key, res)
+        self._corpus_add(res)  # a paid-for real measurement, late or not
 
     def _finalize(self, pending: PendingEval) -> None:
         """Turn a completed future into the pending's EvalResult + memo."""
@@ -549,6 +602,7 @@ class EvaluationExecutor:
             pending._result = EvalResult(dict(pending.point), value, secs,
                                          meta)
             self.cache.put(pending.key, pending._result)
+            self._corpus_add(pending._result, pending.fidelity)
         else:
             # an alias of a measurement another pending already finalized:
             # like every memoized path, it costs 0.0 — charging the full
@@ -630,6 +684,9 @@ class EvaluationExecutor:
         # the configuration itself
         self.cache.put(pending.key, pending._result,
                        persist=not pending._result.meta.get("timeout"))
+        # the inline-measurement branch is a real measurement; the helper
+        # skips the timeout verdicts itself
+        self._corpus_add(pending._result, pending.fidelity)
         return True
 
     def next_completed(self, pendings: Sequence[PendingEval],
@@ -666,13 +723,13 @@ class EvaluationExecutor:
                         self._finalize(p)
                         if first is None:
                             first = p
-                self.cache.flush()
+                self._flush()
                 return first
             now = time.time()
             for p in pendings:
                 if p.deadline is not None and now >= p.deadline:
                     if self._resolve_timeout(p, now):
-                        self.cache.flush()
+                        self._flush()
                         return p
                     # re-dispatched (remote starvation): keep waiting
             if deadline is not None and now >= deadline:
@@ -800,7 +857,8 @@ class EvaluationExecutor:
                 if results[i] is not None:
                     self.cache.put(self.space.key(points[i]), results[i],
                                    persist=not results[i].meta.get("timeout"))
-            self.cache.flush()  # the whole batch is one store write
+                    self._corpus_add(results[i])
+            self._flush()  # the whole batch is one store write
 
         for i, p in enumerate(points):  # resolve in-batch duplicates
             if results[i] is None and not abandoned[i]:
@@ -820,7 +878,7 @@ class EvaluationExecutor:
 
     # -- lifecycle -----------------------------------------------------------
     def close(self) -> None:
-        self.cache.flush()  # nothing buffered may outlive the executor
+        self._flush()  # nothing buffered may outlive the executor
         if self._pool is not None:
             if self._owns_pool:  # a shared pool outlives its tenants
                 self._pool.shutdown(wait=False, cancel_futures=True)

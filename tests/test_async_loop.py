@@ -16,7 +16,7 @@ import time
 
 import pytest
 
-from repro.core import ENGINES, History, Tuner, TunerConfig
+from repro.core import ENGINES, History, Observation, Tuner, TunerConfig
 from repro.core.space import SearchSpace
 
 GOLDEN = json.loads(
@@ -253,7 +253,7 @@ def _drive(engine, tell_order, budget=30):
         asked.append([space.key(p) for p in batch])
         results = [(p, golden_objective(p)) for p in batch]
         for p, v in tell_order(results):
-            engine.tell([p], [v], [0.0])  # incremental: completion order
+            engine.tell([Observation(point=p, value=v)])  # completion order
             h.add(p, v)
     return asked
 
@@ -280,7 +280,7 @@ def test_nms_probe_arriving_before_primary_is_buffered():
     while eng._phase == "init":
         batch = eng.ask(4, h)
         for p in batch:
-            eng.tell([p], [golden_objective(p)], [0.0])
+            eng.tell([Observation(point=p, value=golden_objective(p))])
             h.add(p, golden_objective(p))
     batch = eng.ask(4, h)
     assert len(batch) >= 2, "reflect phase should speculate"
@@ -288,11 +288,11 @@ def test_nms_probe_arriving_before_primary_is_buffered():
     before = space.key(eng._primary())
     # late primary: tell every probe first — machine must not advance
     for p in probes:
-        eng.tell([p], [golden_objective(p)], [0.0])
+        eng.tell([Observation(point=p, value=golden_objective(p))])
         h.add(p, golden_objective(p))
     assert space.key(eng._primary()) == before
     assert all(space.key(p) in eng._told for p in probes)
     # primary lands: machine advances, consuming buffered probes it needs
-    eng.tell([primary], [golden_objective(primary)], [0.0])
+    eng.tell([Observation(point=primary, value=golden_objective(primary))])
     h.add(primary, golden_objective(primary))
     assert space.key(eng._primary()) != before

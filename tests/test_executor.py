@@ -12,7 +12,7 @@ import time
 import numpy as np
 import pytest
 
-from repro.core import ENGINES, SearchSpace, Tuner, TunerConfig
+from repro.core import ENGINES, Observation, SearchSpace, Tuner, TunerConfig
 from repro.tuning.executor import EvalResult, EvaluationExecutor, MemoCache
 from repro.tuning.objective import Evaluator, FunctionEvaluator, as_evaluator
 
@@ -51,7 +51,8 @@ def test_ask_batches_are_deterministic_and_deduped(algo):
             keys = [space.key(p) for p in batch]
             assert len(set(keys)) == len(keys), f"duplicate points in batch: {batch}"
             out.append([dict(p) for p in batch])
-            engine.tell(batch, [golden_objective(p) for p in batch])
+            engine.tell([Observation(point=p, value=golden_objective(p))
+                         for p in batch])
             for p in batch:
                 h.add(p, golden_objective(p))
         return out

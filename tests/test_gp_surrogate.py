@@ -18,6 +18,7 @@ from repro.core import (
     GaussianProcess,
     History,
     IntDim,
+    Observation,
     SearchSpace,
     Tuner,
     TunerConfig,
@@ -137,7 +138,7 @@ def test_engine_warm_start_policy():
         for _ in range(n_iters):
             p = engine.ask(1, h)[0]
             v = float(p["x"] * 0.1 - (p["z"] - 3) ** 2)
-            engine.tell([p], [v], [0.05])
+            engine.tell([Observation(point=p, value=v, cost_seconds=0.05)])
             h.add(p, v, 0.05)
         return h
 
@@ -167,7 +168,7 @@ def test_zero_recompiles_within_bucket():
     def step():
         p = eng.ask(1, h)[0]
         v = float(-(p["x"] - 17) ** 2 - p["z"])
-        eng.tell([p], [v], [0.01])
+        eng.tell([Observation(point=p, value=v, cost_seconds=0.01)])
         h.add(p, v, 0.01)
 
     # warm the bucket: cross into the 32-row training bucket (n=17)
@@ -208,9 +209,9 @@ def test_jit_and_numpy_acquisition_agree(acquisition):
         pj = jit_eng.ask(1, h_j)[0]
         pn = np_eng.ask(1, h_n)[0]
         assert pj == pn  # same ranking from both scoring paths
-        jit_eng.tell([pj], [obj(pj)], [0.0])
+        jit_eng.tell([Observation(point=pj, value=obj(pj))])
         h_j.add(pj, obj(pj))
-        np_eng.tell([pn], [obj(pn)], [0.0])
+        np_eng.tell([Observation(point=pn, value=obj(pn))])
         h_n.add(pn, obj(pn))
 
 
@@ -333,7 +334,8 @@ def _build_cost_history(engine):
     h = History(_COST_SPACE)
     for x in _COST_OBSERVED:  # both regions measured, with their costs
         p = {"x": x}
-        engine.tell([p], [_two_peak_value(p)], [_step_cost(p)])
+        engine.tell([Observation(point=p, value=_two_peak_value(p),
+                                 cost_seconds=_step_cost(p))])
         h.add(p, _two_peak_value(p), _step_cost(p))
     return h
 
@@ -392,6 +394,56 @@ def test_cost_aware_budget_ramp():
     assert eng._cost_alpha() == pytest.approx(0.75)
     eng.note_budget(None)
     assert eng._cost_alpha() == 1.0
+
+
+def test_cost_aware_budget_ramp_edge_cases():
+    """Alpha clamps at the drained end, tolerates out-of-range fractions,
+    and stays inert without a wall-clock budget."""
+    space = SearchSpace([IntDim("x", 0, 19)])
+    eng = BayesOpt(space, seed=0, cost_aware=True)
+    # budget fully drained: alpha saturates at 1, never beyond
+    eng.note_budget(0.0)
+    assert eng._cost_alpha() == 1.0
+    # fractions outside [0, 1] (clock skew, rounding) clamp cleanly
+    eng.note_budget(-0.5)
+    assert eng._cost_alpha() == 1.0
+    eng.note_budget(1.5)
+    assert eng._cost_alpha() == 0.0
+    # no wall-clock budget configured: the ramp is inert — a non-cost-
+    # aware engine keeps alpha pinned regardless of what the tuner reports
+    plain = BayesOpt(space, seed=0)
+    plain.note_budget(0.1)
+    assert plain.budget_fraction_remaining == 0.1
+    assert not plain.cost_aware  # note_budget is recorded but unused
+
+
+def test_cost_aware_repeated_asks_are_deterministic_at_fixed_state():
+    """EI-per-second ranking is a pure function of (GP state, candidate
+    set): asking the same engine repeatedly at a fixed history returns
+    the same suggestion, and the drained-budget alpha does not drift."""
+    aware = BayesOpt(_COST_SPACE, seed=0, acquisition="ei", n_init=2,
+                     cost_aware=True)
+    h = _build_cost_history(aware)
+    aware.note_budget(0.0)  # drained: maximal cost pressure, stable
+    picks = [aware.ask(1, h)[0] for _ in range(3)]
+    assert picks[0] == picks[1] == picks[2]
+    assert aware._cost_alpha() == 1.0  # asks must not perturb the ramp
+    # the full candidate ordering is reproducible, not just the top pick
+    cands = [p for p in _COST_SPACE.enumerate()
+             if p["x"] not in _COST_OBSERVED]
+    Xs = _COST_SPACE.encode_many(cands)
+    order1, acq1 = aware._gp.acquisition_rank(
+        Xs, "ei", float(max(_two_peak_value({"x": x})
+                            for x in _COST_OBSERVED)),
+        cost_gp=aware._cost_gp, cost_alpha=1.0,
+        mean_cost=aware.mean_cost_seconds)
+    order2, acq2 = aware._gp.acquisition_rank(
+        Xs, "ei", float(max(_two_peak_value({"x": x})
+                            for x in _COST_OBSERVED)),
+        cost_gp=aware._cost_gp, cost_alpha=1.0,
+        mean_cost=aware.mean_cost_seconds)
+    assert list(order1) == list(order2)
+    np.testing.assert_array_equal(np.asarray(acq1), np.asarray(acq2))
 
 
 def test_tuner_threads_cost_aware_knob():

@@ -1,0 +1,419 @@
+"""Transfer learning across tuning jobs: corpus storage + similarity,
+surrogate warm-starts, the negative-transfer guard, the candidate
+pre-filter, and the strict-serialization fix for persisted grid keys.
+
+The no-corpus golden traces are pinned in test_executor.py /
+test_async_loop.py; here the complementary invariant is pinned: a
+*configured but unhelpful* corpus (empty, or beyond ``max_distance``)
+must leave the tuning trace byte-identical too.
+"""
+import json
+import math
+import pathlib
+
+import numpy as np
+import pytest
+
+from repro.core import (History, Observation, SearchSpace, TransferConfig,
+                        Tuner, TunerConfig)
+from repro.core.bayesopt import BayesOpt, TransferPrior
+from repro.tuning.corpus import (TuningCorpus, prediction_agreement,
+                                 space_fingerprint, task_features,
+                                 workload_distance)
+from repro.tuning.executor import (EvalResult, EvaluationExecutor, MemoCache,
+                                   _store_key, memo_key)
+from repro.tuning.objective import Evaluator
+
+GOLDEN = json.loads(
+    (pathlib.Path(__file__).parent / "golden" / "ask_tell_traces.json")
+    .read_text())
+
+
+def golden_space() -> SearchSpace:
+    return SearchSpace.from_dicts(GOLDEN["space"])
+
+
+def golden_objective(p):
+    a, b, c = p["inter_op"], p["intra_op"], p["build"]
+    return float(50.0 * pow(2.718281828, -((a - 11) / 5.0) ** 2)
+                 + 0.3 * b - 0.004 * (b - 25) ** 2 + 7.0 * c)
+
+
+class FeaturedObjective(Evaluator):
+    """Synthetic workload with declared task features."""
+
+    def __init__(self, features, value_fn=golden_objective):
+        self.features = dict(features)
+        self.value_fn = value_fn
+        self.calls = 0
+
+    def task_features(self):
+        return dict(self.features)
+
+    def __call__(self, p, fidelity=None):
+        self.calls += 1
+        return self.value_fn(p), {"cost_seconds": 0.01}
+
+
+def _populate(corpus_path, job_id, features, points_values,
+              space=None, objective=None):
+    space = space or golden_space()
+    corpus = TuningCorpus(corpus_path, job_id=job_id)
+    corpus.describe_job(objective or FeaturedObjective(features), space)
+    for p, v in points_values:
+        corpus.add(p, v, cost_seconds=0.02)
+    corpus.flush()
+    return corpus
+
+
+# ---------------------------------------------------------------------------
+# similarity layer
+# ---------------------------------------------------------------------------
+
+def test_workload_distance_properties():
+    a = {"flops": 1e12, "bytes": 4e9}
+    assert workload_distance(a, a) == 0.0
+    assert workload_distance({}, {}) == 0.0  # same space, nothing known
+    near = {"flops": 1.1e12, "bytes": 4.4e9}
+    far = {"flops": 1e14, "bytes": 4e11}
+    assert workload_distance(a, near) < workload_distance(a, far)
+    # a feature only one side declares counts as maximally different
+    assert workload_distance(a, {"flops": 1e12}) == pytest.approx(0.5)
+    # symmetric
+    assert workload_distance(a, far) == pytest.approx(
+        workload_distance(far, a))
+
+
+def test_task_features_coercion_and_fallbacks():
+    assert task_features(lambda p: 1.0) == {}  # plain callables: no hook
+    obj = FeaturedObjective({"flops": 5, "bad": "nan-ish",
+                             "inf": float("inf")})
+    obj.features["bad"] = float("nan")
+    feats = task_features(obj)
+    assert feats == {"flops": 5.0}  # non-finite / non-numeric dropped
+
+    class Exploding:
+        def task_features(self):
+            raise RuntimeError("harness not built yet")
+
+    assert task_features(Exploding()) == {}
+
+
+def test_prediction_agreement_degenerate_cases():
+    assert prediction_agreement([1.0], [2.0]) is None  # < 2 pairs
+    assert prediction_agreement([1, 2], [5, 5]) is None  # constant side
+    assert prediction_agreement([1, 2, 3], [1, 2]) is None  # mismatch
+    assert prediction_agreement([1, 2, 3], [2, 4, 6]) == pytest.approx(1.0)
+    assert prediction_agreement([1, 2, 3], [3, 2, 1]) == pytest.approx(-1.0)
+
+
+# ---------------------------------------------------------------------------
+# corpus storage + neighbor selection
+# ---------------------------------------------------------------------------
+
+def test_corpus_roundtrip_persists_across_instances(tmp_path):
+    path = tmp_path / "corpus.json"
+    space = golden_space()
+    feats = {"flops": 1e12}
+    pts = space.sample(np.random.default_rng(0), 4)
+    _populate(path, "writer", feats, [(p, golden_objective(p)) for p in pts])
+
+    reader = TuningCorpus(path, job_id="reader")
+    recs = reader.records()
+    assert len(recs) == 4
+    for rec in recs:
+        assert rec["workload"]["job_id"] == "writer"
+        assert rec["workload"]["space"] == space_fingerprint(space)
+        assert rec["cost_seconds"] == pytest.approx(0.02)
+    rows = reader.prior_observations(space, feats)
+    assert len(rows) == 4
+    assert all(r["distance"] == 0.0 for r in rows)
+
+
+def test_corpus_add_requires_descriptor(tmp_path):
+    corpus = TuningCorpus(tmp_path / "c.json", job_id="j")
+    with pytest.raises(RuntimeError, match="describe_job"):
+        corpus.add({"inter_op": 1, "intra_op": 0, "build": 1}, 1.0)
+
+
+def test_neighbors_filter_space_distance_and_own_job(tmp_path):
+    path = tmp_path / "corpus.json"
+    space = golden_space()
+    p = {"inter_op": 3, "intra_op": 10, "build": 1}
+    base = {"flops": 1e12, "bytes": 4e9}
+    _populate(path, "near", base, [(p, 1.0)])
+    _populate(path, "far", {"flops": 1e15, "bytes": 4e12}, [(p, 2.0)])
+    other_space = SearchSpace.from_dicts(
+        [{"type": "int", "name": "inter_op", "min": 1, "max": 4}])
+    _populate(path, "other-space", base,
+              [({"inter_op": 2}, 3.0)], space=other_space)
+
+    reader = TuningCorpus(path, job_id="me")
+    near = reader.neighbors(space, base)
+    assert [g["job_id"] for g in near] == ["near"]  # far + other-space cut
+    assert near[0]["distance"] == 0.0
+    # a job never sees itself as a neighbor (no self-transfer)
+    assert reader.neighbors(space, base, exclude_job="near") == []
+
+
+def test_prior_observations_skip_failures_and_stale_points(tmp_path):
+    path = tmp_path / "corpus.json"
+    space = golden_space()
+    feats = {"flops": 1e12}
+    good = {"inter_op": 3, "intra_op": 10, "build": 1}
+    stale = {"inter_op": 99, "intra_op": 10, "build": 1}  # not on the grid
+    _populate(path, "donor", feats,
+              [(good, 5.0), (good, float("-inf")), (stale, 9.0)])
+    rows = TuningCorpus(path, job_id="me").prior_observations(space, feats)
+    assert [r["value"] for r in rows] == [5.0]
+
+
+def test_prior_observations_quota_keeps_value_spread(tmp_path):
+    path = tmp_path / "corpus.json"
+    space = golden_space()
+    feats = {"flops": 1e12}
+    pts = space.sample(np.random.default_rng(1), 30)
+    _populate(path, "donor", feats,
+              [(p, float(i)) for i, p in enumerate(pts)])
+    rows = TuningCorpus(path, job_id="me").prior_observations(
+        space, feats, max_rows=8)
+    values = sorted(r["value"] for r in rows)
+    assert len(rows) <= 8
+    assert values[0] == 0.0 and values[-1] == 29.0  # floor and peak kept
+
+
+# ---------------------------------------------------------------------------
+# TransferPrior + engine warm-start
+# ---------------------------------------------------------------------------
+
+def _prior_from(space, points_values, distance=0.1):
+    rows = [{"point": p, "value": v, "distance": distance}
+            for p, v in points_values]
+    return TransferPrior.from_rows(space, rows)
+
+
+def test_transfer_prior_predict_and_noise_scale():
+    space = golden_space()
+    pts = space.sample(np.random.default_rng(2), 12)
+    prior = _prior_from(space, [(p, golden_objective(p)) for p in pts])
+    pred = prior.predict(space.encode_many(pts))
+    # NW at the observed points themselves must correlate strongly
+    assert np.corrcoef(pred, prior.y)[0, 1] > 0.8
+    assert prior.best_point() in [dict(p) for p in pts]
+    # noise inflation: >= 1 everywhere, grows with real-observation count
+    n0, n8 = prior.noise_scale(0, 24), prior.noise_scale(8, 24)
+    assert (n0 >= 1.0).all() and (n8 > n0).all()
+    # and with workload distance
+    far = _prior_from(space, [(p, golden_objective(p)) for p in pts],
+                      distance=0.9)
+    assert (far.noise_scale(0, 24) > prior.noise_scale(0, 24)).all()
+
+
+def test_warm_started_engine_first_ask_exploits_prior():
+    """With a trustworthy neighbor prior, the first ask skips the LHS
+    design phase and lands near the prior's optimum region."""
+    space = golden_space()
+    pts = space.sample(np.random.default_rng(3), 24)
+    prior = _prior_from(space, [(p, golden_objective(p)) for p in pts])
+    eng = BayesOpt(space, seed=0, transfer_prior=prior)
+    h = History(space)
+    batch = eng.ask(1, h)
+    assert len(batch) == 1
+    # cold engine at the same seed is still in its LHS phase
+    cold = BayesOpt(space, seed=0).ask(1, History(space))
+    assert eng._init_points is None  # no LHS design was drawn
+    best_prior_v = max(golden_objective(p) for p in pts)
+    assert golden_objective(batch[0]) >= best_prior_v - 10.0
+    assert cold != batch or True  # traces may coincide; the real pin is above
+
+
+def test_prior_retires_after_decay_evals():
+    space = golden_space()
+    pts = space.sample(np.random.default_rng(4), 8)
+    prior = _prior_from(space, [(p, golden_objective(p)) for p in pts])
+    eng = BayesOpt(space, seed=0, transfer_prior=prior, transfer_decay=4)
+    h = History(space)
+    for p in space.sample(np.random.default_rng(5), 4):
+        v = golden_objective(p)
+        eng.tell([Observation(point=p, value=v)])
+        h.add(p, v)
+    assert eng._active_prior(h) is None  # decayed out, permanently
+    assert eng._prior_dropped
+
+
+def test_negative_transfer_guard_drops_anticorrelated_prior():
+    space = golden_space()
+    pts = space.sample(np.random.default_rng(6), 16)
+    # the prior claims the landscape is inverted
+    prior = _prior_from(space, [(p, -golden_objective(p)) for p in pts])
+    eng = BayesOpt(space, seed=0, transfer_prior=prior, transfer_guard_n=3)
+    h = History(space)
+    for p in space.sample(np.random.default_rng(7), 3):
+        v = golden_objective(p)
+        eng.tell([Observation(point=p, value=v)])
+        h.add(p, v)
+    assert eng._active_prior(h) is None
+    assert eng._prior_dropped
+    # an agreeing prior survives the same check
+    good = _prior_from(space, [(p, golden_objective(p)) for p in pts])
+    eng2 = BayesOpt(space, seed=0, transfer_prior=good, transfer_guard_n=3)
+    h2 = History(space)
+    for p in space.sample(np.random.default_rng(7), 3):
+        v = golden_objective(p)
+        eng2.tell([Observation(point=p, value=v)])
+        h2.add(p, v)
+    assert eng2._active_prior(h2) is good
+    assert not eng2._prior_dropped
+
+
+# ---------------------------------------------------------------------------
+# tuner integration: warm-start, pre-filter, unchanged-trace invariants
+# ---------------------------------------------------------------------------
+
+def test_tuner_records_into_corpus_and_warm_run_reuses_it(tmp_path):
+    corpus_path = tmp_path / "corpus.json"
+    space = golden_space()
+    feats = {"flops": 1e12, "bytes": 4e9}
+
+    donor = FeaturedObjective(feats)
+    t = Tuner(donor, space,
+              TunerConfig(algorithm="random", budget=10, seed=0,
+                          verbose=False,
+                          transfer=TransferConfig(
+                              corpus_path=str(corpus_path),
+                              job_id="donor")))
+    t.run()
+    t.close()
+    assert len(json.loads(corpus_path.read_text())) == 10
+
+    # a BO job on a near workload builds a prior from the donor records
+    warm_obj = FeaturedObjective({"flops": 1.1e12, "bytes": 4.4e9})
+    warm = Tuner(warm_obj, space,
+                 TunerConfig(algorithm="bo", budget=2, seed=0,
+                             verbose=False,
+                             transfer=TransferConfig(
+                                 corpus_path=str(corpus_path),
+                                 job_id="warm")))
+    assert warm._transfer_prior is not None
+    assert len(warm._transfer_prior) == 10
+    assert warm.engine.transfer_prior is warm._transfer_prior
+    assert warm._prefilter_on
+    warm.close()
+
+
+def test_empty_or_dissimilar_corpus_leaves_trace_byte_identical(tmp_path):
+    """A configured corpus with nothing relevant in it must not perturb
+    the tuning trace at all — the golden parallelism=1 trace is
+    reproduced byte-for-byte through the full transfer-enabled path."""
+    empty = tmp_path / "empty.json"
+    trace = GOLDEN["traces"]["bo:0"]
+    t = Tuner(golden_objective, golden_space(),
+              TunerConfig(algorithm="bo", budget=18, seed=0, verbose=False,
+                          parallelism=1,
+                          transfer=TransferConfig(corpus_path=str(empty),
+                                                  job_id="fresh")))
+    h = t.run()
+    t.close()
+    assert h.points() == trace["points"]
+    assert [e.value for e in h.evals] == pytest.approx(trace["values"])
+
+
+def test_prefilter_respects_unsafe_engines(tmp_path):
+    """Nelder-Mead's speculative batches must never be pre-filtered."""
+    corpus_path = tmp_path / "corpus.json"
+    space = golden_space()
+    feats = {"flops": 1e12}
+    pts = space.sample(np.random.default_rng(8), 12)
+    _populate(corpus_path, "donor", feats,
+              [(p, golden_objective(p)) for p in pts])
+    t = Tuner(FeaturedObjective(feats), space,
+              TunerConfig(algorithm="nms", budget=4, seed=0, verbose=False,
+                          transfer=TransferConfig(
+                              corpus_path=str(corpus_path), job_id="nms")))
+    assert t._transfer_prior is not None  # the prior exists...
+    assert not t._prefilter_on            # ...but NMS opts out
+    t.run()
+    t.close()
+
+
+def test_transfer_config_roundtrip_and_unknown_key_rejection():
+    cfg = TunerConfig(algorithm="bo", budget=5,
+                      transfer=TransferConfig(corpus_path="c.json",
+                                              keep_fraction=0.25))
+    d = cfg.to_dict()
+    assert d["transfer"]["corpus_path"] == "c.json"
+    back = TunerConfig.from_dict(d)
+    assert back.transfer.to_dict() == cfg.transfer.to_dict()
+    assert bool(back.transfer)
+    assert not bool(TunerConfig(algorithm="bo", budget=5).transfer)
+    with pytest.raises(ValueError, match="keep_fractoin"):
+        TunerConfig.from_dict(
+            {"algorithm": "bo", "budget": 5,
+             "transfer": {"corpus_path": "c.json", "keep_fractoin": 0.5}})
+
+
+def test_legacy_tell_signature_still_warns():
+    """The deprecation shim stays behaviorally exact while every repro-
+    internal caller is held to the Observation API by the pytest
+    ``filterwarnings = error::DeprecationWarning:repro`` gate."""
+    from repro.core import ENGINES
+
+    space = golden_space()
+    eng = ENGINES["random"](space, seed=0)
+    p = {"inter_op": 1, "intra_op": 0, "build": 1}
+    with pytest.warns(DeprecationWarning, match="pass a sequence of"):
+        eng.tell([p], [1.5], [0.25])
+    assert eng.mean_cost_seconds == pytest.approx(0.25)
+
+
+# ---------------------------------------------------------------------------
+# executor hooks
+# ---------------------------------------------------------------------------
+
+def test_executor_records_real_measurements_only(tmp_path):
+    space = golden_space()
+    corpus = TuningCorpus(tmp_path / "corpus.json", job_id="exec")
+    obj = FeaturedObjective({"flops": 1e12})
+    ex = EvaluationExecutor(obj, space, parallelism=1, corpus=corpus)
+    assert corpus.descriptor is not None  # executor bound the descriptor
+    p1 = {"inter_op": 1, "intra_op": 0, "build": 1}
+    p2 = {"inter_op": 2, "intra_op": 5, "build": 2}
+    ex.evaluate([p1, p2])
+    ex.evaluate([p1])  # memo hit: must NOT be re-recorded
+    ex.close()
+    recs = TuningCorpus(tmp_path / "corpus.json", job_id="other").records()
+    assert len(recs) == 2
+    assert {tuple(space.key(r["point"])) for r in recs} \
+        == {space.key(p1), space.key(p2)}
+    assert all(r["workload"]["job_id"] == "exec" for r in recs)
+
+
+# ---------------------------------------------------------------------------
+# strict grid-key serialization (the default=str regression)
+# ---------------------------------------------------------------------------
+
+def test_store_key_rejects_non_json_components():
+    with pytest.raises(TypeError, match="np.int64|int64"):
+        _store_key((np.int64(3), "x"))
+    with pytest.raises(TypeError, match="not strictly JSON-serializable"):
+        _store_key((object(), 1))
+
+
+def test_store_key_roundtrips_fidelity_marker():
+    key = memo_key(("a", 2, 1), 0.25)
+    skey = _store_key(key)
+    assert json.loads(skey)[-1] == ["__fidelity__", 0.25]
+    assert MemoCache._stored_fidelity(skey) == 0.25
+    full = _store_key(memo_key(("a", 2, 1), None))
+    assert MemoCache._stored_fidelity(full) is None
+
+
+def test_memo_cache_put_with_numpy_key_fails_loudly(tmp_path):
+    from repro.tuning.cache import JsonCacheStore
+
+    cache = MemoCache(store=JsonCacheStore(tmp_path / "memo.json"))
+    ok_key = (3, "x")
+    cache.put(ok_key, EvalResult({"a": 1}, 2.0, 0.1, {}))
+    assert cache.get(ok_key).value == 2.0
+    with pytest.raises(TypeError, match="grid key"):
+        cache.put((np.int64(3), "x"), EvalResult({"a": 1}, 2.0, 0.1, {}))
