@@ -357,6 +357,7 @@ class BayesOpt(Engine):
     def ask(self, n: int, history: History) -> List[Dict]:
         t0 = time.perf_counter()
         entries0 = gp_module.jit_cache_entries()
+        self.last_ask_ranked = None  # set by _ask_transfer when it pads
         try:
             return self._ask(n, history)
         finally:
@@ -444,6 +445,10 @@ class BayesOpt(Engine):
             if k in keys or history.seen(c) or history.pending(c):
                 continue
             emit(dict(c))
+        # everything past this index is an unranked random fill, not an
+        # acquisition-ranked suggestion: report the boundary so the
+        # tuner's pre-filter never promotes a fill over a ranked point
+        self.last_ask_ranked = len(batch)
         while len(batch) < n:  # candidate set exhausted: random fill
             emit(self._unseen(history, self.space.sample(self.rng, 1)[0],
                               exclude=keys))

@@ -57,15 +57,25 @@ class Engine:
 
     #: whether the tuner's transfer pre-filter may over-ask this engine and
     #: measure only the top-ranked fraction of the batch.  Safe for engines
-    #: whose asks are independent suggestions (random/GA/BO/exhaustive);
-    #: engines with speculative-batch state machines (Nelder-Mead) require
-    #: every asked point to eventually be told and must opt out.
+    #: whose asks are independent suggestions (random/GA/BO); engines whose
+    #: asks consume irreplaceable state must opt out — Nelder-Mead's
+    #: speculative batches require every asked point to eventually be told,
+    #: and Exhaustive's one-shot grid iterator never re-proposes a point a
+    #: filter dropped.
     prefilter_safe = True
 
     def __init__(self, space: SearchSpace, seed: int = 0):
         self.space = space
         self.rng = np.random.default_rng(seed)
         self._cost_log: List[float] = []  # measured seconds per told result
+        #: set by engines whose ``ask`` pads the tail of an exhausted
+        #: candidate pool with unranked random fills (warm-started BO):
+        #: the count of *ranked* candidates at the head of the most
+        #: recent batch, or ``None`` when the whole batch is ranked (or
+        #: the engine makes no such distinction).  The tuner's transfer
+        #: pre-filter re-ranks only the ranked head, so a random fill
+        #: can never displace a candidate the engine actually ranked.
+        self.last_ask_ranked: Optional[int] = None
         #: fraction of the wall-clock budget still left (None = no budget);
         #: updated by the tuner via ``note_budget`` so cost-aware engines can
         #: sharpen their cheap-probe preference as the deadline approaches

@@ -11,6 +11,12 @@ from repro.core.space import SearchSpace
 class Exhaustive(Engine):
     name = "exhaustive"
 
+    #: asks are a stateful enumeration, not independent suggestions: each
+    #: ask consumes the one-shot grid iterator, so a point the transfer
+    #: pre-filter discarded would never be re-proposed and the "exhaustive"
+    #: sweep would silently skip part of the grid.  Opt out entirely.
+    prefilter_safe = False
+
     def __init__(self, space: SearchSpace, seed: int = 0):
         super().__init__(space, seed)
         self._it: Iterator[Dict] = space.enumerate()

@@ -558,7 +558,18 @@ class Tuner:
         cands = self.engine.ask(ask_n, history)
         if len(cands) <= want:
             return cands
-        scores = prior.predict(self.space.encode_many(cands))
+        # an engine that padded the tail of an exhausted candidate pool
+        # with unranked random fills reports the ranked head via
+        # ``last_ask_ranked`` (warm-started BO): only the head competes
+        # under the prior's score, so a random fill scored by the same
+        # prior can never displace a candidate the engine actually
+        # ranked — fills may only top up a deficit, in engine order
+        ranked_n = getattr(self.engine, "last_ask_ranked", None)
+        if ranked_n is None or not 0 <= ranked_n <= len(cands):
+            ranked_n = len(cands)
+        if ranked_n <= want:
+            return cands[:want]  # whole ranked head survives + fills
+        scores = prior.predict(self.space.encode_many(cands[:ranked_n]))
         top = np.argsort(-scores, kind="stable")[:want]
         # keep the engine's own proposal order among survivors (for BO
         # that is acquisition-descending)

@@ -36,6 +36,7 @@ import math
 import os
 import platform
 import time
+import uuid
 from typing import Any, Dict, List, Optional
 
 from repro.tuning.cache import CacheStore, JsonCacheStore, NullCacheStore
@@ -159,6 +160,13 @@ class TuningCorpus:
         self.descriptor: Optional[Dict[str, Any]] = None
         self._pending: Dict[str, Any] = {}
         self._n_added = 0
+        # per-process nonce in every record key: job_ids recur (service
+        # crash-resume reuses them; launch/tune.py derives deterministic
+        # ones), and the in-process counter restarts at 1, so without the
+        # nonce a re-run would overwrite the earlier run's records at the
+        # same key indices — put_many merges by key, and "append-only"
+        # must mean append-only across processes too
+        self._run_nonce = uuid.uuid4().hex[:12]
 
     # -- write side -----------------------------------------------------------
 
@@ -182,6 +190,7 @@ class TuningCorpus:
                                "workload descriptor must be bound first")
         self._n_added += 1
         key = json.dumps({"job": self.descriptor["job_id"],
+                          "run": self._run_nonce,
                           "space": self.descriptor["space"],
                           "n": self._n_added}, sort_keys=True)
         self._pending[key] = {

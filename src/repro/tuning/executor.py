@@ -169,18 +169,43 @@ def run_objective(objective: Evaluator, point: Dict,
     return value, seconds, meta
 
 
+def _canon_key_component(c):
+    """Canonical JSON form of one grid-key component.
+
+    Tuples become lists (so the fidelity marker stays parseable by
+    ``MemoCache._stored_fidelity``) and numpy scalars unwrap via
+    ``.item()`` — a *lossless* coercion (``np.int64(3)`` -> ``3``), so a
+    space built from e.g. ``np.linspace`` values keys identically to its
+    plain-Python spelling for both store and lookup.  Duck-typed on the
+    type's module so measurement workers importing this module never pay
+    a numpy import.  Anything else passes through for the strict
+    round-trip check to judge.
+    """
+    if isinstance(c, (tuple, list)):
+        return [_canon_key_component(v) for v in c]
+    if type(c).__module__ == "numpy" and getattr(c, "ndim", 1) == 0:
+        v = c.item()
+        # .item() can hand back the same numpy type when there is no
+        # lossless Python equivalent (np.longdouble): leave it for the
+        # round-trip check to reject instead of recursing forever
+        if type(v) is not type(c):
+            return _canon_key_component(v)
+    return c
+
+
 def _store_key(key) -> str:
     """Stable string form of a grid key for the on-disk store.
 
-    Keys serialize as JSON lists (tuples converted explicitly, so the
-    fidelity marker stays parseable by ``MemoCache._stored_fidelity``)
-    and serialization is **strict**: a component that is not canonical
-    JSON — a numpy scalar, an arbitrary object — raises ``TypeError``
-    naming it.  The historical ``default=str`` fallback silently
-    stringified such components, producing store keys that could collide
-    with (or never round-trip back to) the honest spelling.
+    Components are canonicalized first (:func:`_canon_key_component`:
+    tuples -> lists, numpy scalars -> their exact Python values) and
+    serialization is then **strict**: a component that is still not
+    canonical JSON — an arbitrary object, a lossy exotic scalar — raises
+    ``TypeError`` naming it.  The historical ``default=str`` fallback
+    silently stringified such components, producing store keys that
+    could collide with (or never round-trip back to) the honest
+    spelling.
     """
-    parts = [list(c) if isinstance(c, tuple) else c for c in key]
+    parts = [_canon_key_component(c) for c in key]
     bad = _round_trip_violation(parts, path="grid key")
     if bad:
         raise TypeError(

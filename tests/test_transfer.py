@@ -130,6 +130,22 @@ def test_corpus_roundtrip_persists_across_instances(tmp_path):
     assert all(r["distance"] == 0.0 for r in rows)
 
 
+def test_corpus_rerun_with_same_job_id_appends_not_overwrites(tmp_path):
+    """Crash-resume reuses job.job_id and launch/tune.py derives
+    deterministic job_ids, so two *processes* writing under the same
+    job_id must union their records — the per-process key nonce keeps a
+    re-run from overwriting the earlier run at the same key indices."""
+    path = tmp_path / "corpus.json"
+    space = golden_space()
+    feats = {"flops": 1e12}
+    p = {"inter_op": 3, "intra_op": 10, "build": 1}
+    # two corpus instances = two processes resuming the same job
+    _populate(path, "job-A", feats, [(p, 1.0), (p, 2.0)])
+    _populate(path, "job-A", feats, [(p, 3.0), (p, 4.0)])
+    recs = TuningCorpus(path, job_id="reader").records()
+    assert sorted(r["value"] for r in recs) == [1.0, 2.0, 3.0, 4.0]
+
+
 def test_corpus_add_requires_descriptor(tmp_path):
     corpus = TuningCorpus(tmp_path / "c.json", job_id="j")
     with pytest.raises(RuntimeError, match="describe_job"):
@@ -300,6 +316,19 @@ def test_tuner_records_into_corpus_and_warm_run_reuses_it(tmp_path):
     assert warm._prefilter_on
     warm.close()
 
+    # warm_start off -> the engine never sees the prior; the tuner-level
+    # pre-filter is the only consumer and stays on
+    filt = Tuner(FeaturedObjective({"flops": 1.1e12, "bytes": 4.4e9}), space,
+                 TunerConfig(algorithm="bo", budget=2, seed=0,
+                             verbose=False,
+                             transfer=TransferConfig(
+                                 corpus_path=str(corpus_path),
+                                 job_id="filt", warm_start=False)))
+    assert filt._transfer_prior is not None
+    assert getattr(filt.engine, "transfer_prior", None) is None
+    assert filt._prefilter_on
+    filt.close()
+
 
 def test_empty_or_dissimilar_corpus_leaves_trace_byte_identical(tmp_path):
     """A configured corpus with nothing relevant in it must not perturb
@@ -334,6 +363,99 @@ def test_prefilter_respects_unsafe_engines(tmp_path):
     assert not t._prefilter_on            # ...but NMS opts out
     t.run()
     t.close()
+
+
+def test_prefilter_never_promotes_random_fills_over_ranked_head(tmp_path):
+    """An engine that pads an exhausted candidate pool with random fills
+    reports the ranked head (``last_ask_ranked``); the filter must only
+    re-rank the head — a fill scored by the same prior must never
+    displace a candidate the engine actually ranked."""
+    corpus_path = tmp_path / "corpus.json"
+    space = golden_space()
+    feats = {"flops": 1e12}
+    pts = space.sample(np.random.default_rng(9), 8)
+    _populate(corpus_path, "donor", feats,
+              [(p, golden_objective(p)) for p in pts])
+    t = Tuner(FeaturedObjective(feats), space,
+              TunerConfig(algorithm="random", budget=4, seed=0, verbose=False,
+                          transfer=TransferConfig(
+                              corpus_path=str(corpus_path), job_id="me",
+                              keep_fraction=0.4)))
+    assert t._prefilter_on
+    cands = space.sample(np.random.default_rng(10), 5)
+
+    class FakePrior:  # scores strictly increasing by candidate index
+        def predict(self, X):
+            return np.arange(np.asarray(X).shape[0], dtype=float)
+
+    t._transfer_prior = FakePrior()
+    t.engine.ask = lambda n, h: [dict(c) for c in cands[:n]]
+    # no ranked/fill boundary declared: the whole batch competes
+    t.engine.last_ask_ranked = None
+    assert t._ask_filtered(2, t.history) == [cands[3], cands[4]]
+    # ranked head longer than want: filter picks within the head only;
+    # the fill tail (cands[4], the prior's favorite) is excluded
+    t.engine.last_ask_ranked = 4
+    assert t._ask_filtered(2, t.history) == [cands[2], cands[3]]
+    # ranked head shorter than want: the whole head survives unfiltered
+    # and fills only top up the deficit, in engine order
+    t.engine.last_ask_ranked = 1
+    assert t._ask_filtered(2, t.history) == [cands[0], cands[1]]
+    t.close()
+
+
+def test_warm_bo_reports_ranked_head_when_padding():
+    """BayesOpt's transfer ask marks where acquisition-ranked candidates
+    end and random fills begin."""
+    space = SearchSpace.from_dicts([
+        {"type": "int", "name": "inter_op", "min": 1, "max": 6}])
+    pts = [dict(p) for p in space.enumerate()]
+    prior = _prior_from(space, [(p, float(p["inter_op"])) for p in pts])
+    eng = BayesOpt(space, seed=0, transfer_prior=prior)
+    h = History(space)
+    for p in pts[:3]:
+        v = float(p["inter_op"])
+        eng.tell([Observation(point=p, value=v)])
+        h.add(p, v)
+    batch = eng.ask(5, h)
+    assert len(batch) == 5
+    # 3 unseen grid points were acquisition-ranked; 2 were random fills
+    assert eng.last_ask_ranked == 3
+
+
+def test_exhaustive_sweep_is_never_prefiltered(tmp_path):
+    """Exhaustive's asks consume a one-shot grid iterator: a pre-filtered
+    point would never be re-proposed, so an 'exhaustive' sweep with a
+    corpus attached (the service attaches one to every job) would
+    silently skip grid points — it must opt out and still cover the
+    whole grid."""
+    from repro.core.exhaustive import Exhaustive
+
+    assert Exhaustive.prefilter_safe is False
+
+    corpus_path = tmp_path / "corpus.json"
+    space = SearchSpace.from_dicts([
+        {"type": "int", "name": "inter_op", "min": 1, "max": 4},
+        {"type": "cat", "name": "build", "choices": [0, 1, 2]},
+    ])
+    feats = {"flops": 1e12}
+    pts = [dict(p) for p in space.enumerate()]
+    _populate(corpus_path, "donor", feats,
+              [(p, float(i)) for i, p in enumerate(pts)], space=space)
+
+    obj = FeaturedObjective(feats, value_fn=lambda p: float(p["inter_op"]))
+    t = Tuner(obj, space,
+              TunerConfig(algorithm="exhaustive", budget=len(pts) + 5,
+                          seed=0, verbose=False,
+                          transfer=TransferConfig(
+                              corpus_path=str(corpus_path), job_id="sweep")))
+    assert t._transfer_prior is not None  # the prior exists...
+    assert not t._prefilter_on            # ...but exhaustive opts out
+    h = t.run()
+    t.close()
+    # every grid point was measured exactly once — nothing skipped
+    assert sorted(space.key(p) for p in h.points()) \
+        == sorted(space.key(p) for p in pts)
 
 
 def test_transfer_config_roundtrip_and_unknown_key_rejection():
@@ -392,9 +514,21 @@ def test_executor_records_real_measurements_only(tmp_path):
 # strict grid-key serialization (the default=str regression)
 # ---------------------------------------------------------------------------
 
+def test_store_key_coerces_numpy_scalars_losslessly():
+    """Numpy scalars (a space built from np.linspace / np.arange values)
+    canonicalize via .item(): the store key is byte-identical to the
+    plain-Python spelling, so memoization keeps working for store and
+    lookup alike instead of hard-failing at persist time."""
+    assert _store_key((np.int64(3), "x")) == _store_key((3, "x"))
+    assert _store_key((np.float64(0.5), np.bool_(True))) \
+        == _store_key((0.5, True))
+    # and inside the (tuple-shaped) fidelity marker
+    assert _store_key(memo_key(("a", np.int64(2)), np.float64(0.25))) \
+        == _store_key(memo_key(("a", 2), 0.25))
+
+
 def test_store_key_rejects_non_json_components():
-    with pytest.raises(TypeError, match="np.int64|int64"):
-        _store_key((np.int64(3), "x"))
+    """TypeError is reserved for genuinely non-JSON objects."""
     with pytest.raises(TypeError, match="not strictly JSON-serializable"):
         _store_key((object(), 1))
 
@@ -408,12 +542,15 @@ def test_store_key_roundtrips_fidelity_marker():
     assert MemoCache._stored_fidelity(full) is None
 
 
-def test_memo_cache_put_with_numpy_key_fails_loudly(tmp_path):
+def test_memo_cache_numpy_key_memoizes_to_same_slot(tmp_path):
     from repro.tuning.cache import JsonCacheStore
 
-    cache = MemoCache(store=JsonCacheStore(tmp_path / "memo.json"))
-    ok_key = (3, "x")
-    cache.put(ok_key, EvalResult({"a": 1}, 2.0, 0.1, {}))
-    assert cache.get(ok_key).value == 2.0
-    with pytest.raises(TypeError, match="grid key"):
-        cache.put((np.int64(3), "x"), EvalResult({"a": 1}, 2.0, 0.1, {}))
+    path = tmp_path / "memo.json"
+    cache = MemoCache(store=JsonCacheStore(path))
+    cache.put((np.int64(3), "x"), EvalResult({"a": 1}, 2.0, 0.1, {}))
+    cache.put((3, "x"), EvalResult({"a": 1}, 2.0, 0.1, {}))
+    # numpy and plain spellings hash/compare equal in memory and collapse
+    # to ONE canonical store key on disk — not a colliding pair
+    assert cache.get((3, "x")).value == 2.0
+    on_disk = json.loads(path.read_text())
+    assert list(on_disk) == [_store_key((3, "x"))]
