@@ -80,6 +80,7 @@ from repro.core.random_search import RandomSearch
 from repro.core.space import SearchSpace
 from repro.tuning.executor import EvalResult, EvaluationExecutor, PendingEval
 from repro.tuning.objective import as_evaluator
+from repro.tuning.remote import FleetOptions
 
 ENGINES = {
     "bo": BayesOpt,
@@ -121,6 +122,22 @@ class ExecutorConfig:
     ``eval_timeout``     seconds per evaluation; -inf past it
     ``memo_cache_path``  disk-backed cross-run memo cache
     ``batch_size``       batch loop only: points per ask
+
+    Elastic-fleet knobs (remote backend only; ignored elsewhere so
+    local backends stay byte-identical):
+
+    ``fleet_port``          join-socket port kept open for the whole run
+                            (0 = ephemeral, None = fixed fleet, no socket)
+    ``fleet_homogeneity``   strict (refuse mixed hardware fingerprints) |
+                            normalize (admit + calibrate cost_seconds)
+    ``speculation``         re-execute stragglers on an idle worker
+    ``speculation_factor``  duplicate a task once its age exceeds
+                            factor × p95 of observed completions
+    ``speculation_min_observations``  completions needed per fidelity
+                            before the p95 is trusted
+    ``heartbeat_s``         fleet-wide heartbeat default; each worker's
+                            stall window is 3 missed beats of its own
+                            registered interval
     """
 
     parallelism: int = 1
@@ -129,6 +146,12 @@ class ExecutorConfig:
     eval_timeout: Optional[float] = None
     memo_cache_path: Optional[str] = None
     batch_size: Optional[int] = None
+    fleet_port: Optional[int] = 0
+    fleet_homogeneity: str = "strict"
+    speculation: bool = True
+    speculation_factor: float = 4.0
+    speculation_min_observations: int = 4
+    heartbeat_s: Optional[float] = None
 
     def to_dict(self) -> dict:
         return asdict(self)
@@ -137,6 +160,17 @@ class ExecutorConfig:
     def from_dict(cls, d: dict) -> "ExecutorConfig":
         _check_keys(d, {f.name for f in fields(cls)}, "ExecutorConfig")
         return cls(**d)
+
+    def fleet_options(self) -> FleetOptions:
+        """Elastic-fleet knobs in `RemoteWorkerPool` form (remote only)."""
+        return FleetOptions(
+            listen_port=self.fleet_port,
+            speculation=self.speculation,
+            speculation_factor=self.speculation_factor,
+            min_observations=self.speculation_min_observations,
+            homogeneity=self.fleet_homogeneity,
+            heartbeat_s=self.heartbeat_s,
+        )
 
 
 @dataclass
@@ -470,6 +504,10 @@ class Tuner:
                 cache_path=config.executor.memo_cache_path,
                 workers=config.executor.workers,
                 corpus=corpus,
+                # elastic-fleet knobs only reach a pool we build ourselves;
+                # local backends never see them (byte-identical traces)
+                fleet=(config.executor.fleet_options()
+                       if backend == "remote" else None),
             )
         self.history = History(space)
         self.rung_scheduler = None  # set by the multi-fidelity loop

@@ -117,7 +117,10 @@ class TuningService:
                  workers: Optional[List[str]] = None, parallelism: int = 4,
                  host: str = "127.0.0.1", port: int = 0,
                  eval_timeout: Optional[float] = None, verbose: bool = True,
-                 rebalance_s: float = 0.5, corpus_path=None):
+                 rebalance_s: float = 0.5, corpus_path=None,
+                 heartbeat_s: Optional[float] = None,
+                 fleet_port: Optional[int] = 0,
+                 fleet_homogeneity: str = "strict"):
         from repro.checkpoint.checkpointer import JsonCheckpointer
 
         self._JsonCheckpointer = JsonCheckpointer
@@ -141,10 +144,13 @@ class TuningService:
         # -- the one shared measurement substrate -----------------------------
         self.workers = list(workers) if workers else None
         if self.workers:
-            from repro.tuning.remote import RemoteWorkerPool
+            from repro.tuning.remote import FleetOptions, RemoteWorkerPool
 
-            self._pool = RemoteWorkerPool(self.workers,
-                                          eval_timeout=eval_timeout)
+            self._pool = RemoteWorkerPool(
+                self.workers, eval_timeout=eval_timeout,
+                fleet=FleetOptions(listen_port=fleet_port,
+                                   homogeneity=fleet_homogeneity,
+                                   heartbeat_s=heartbeat_s))
             self._backend = "remote"
             self._local_slots = None
         else:
@@ -453,8 +459,10 @@ class TuningService:
     # -- status ----------------------------------------------------------------
     def fleet_health(self) -> dict:
         if self._backend == "remote":
-            return {"backend": "remote", "slots": self.total_slots(),
-                    "workers": self._pool.fleet_health()}
+            out = {"backend": "remote", "slots": self.total_slots(),
+                   "workers": self._pool.fleet_health()}
+            out.update(self._pool.fleet_stats())
+            return out
         return {"backend": "thread", "slots": self.total_slots()}
 
     def job_status(self, job_id: str) -> dict:
@@ -691,9 +699,25 @@ def print_status(st: dict) -> None:
               f"promoted={row['promoted']} preempted={row['preempted']}")
     fleet = st.get("fleet") or {}
     if fleet.get("backend") == "remote":
-        alive = sum(1 for w in fleet.get("workers", []) if w.get("alive"))
-        print(f"    fleet: {alive}/{len(fleet.get('workers', []))} workers "
-              f"alive, {fleet.get('slots')} slots")
+        workers = fleet.get("workers", [])
+        alive = sum(1 for w in workers if w.get("alive"))
+        line = (f"    fleet: {alive}/{len(workers)} workers alive, "
+                f"{fleet.get('slots')} slots")
+        if fleet.get("join_address"):
+            line += f", join={fleet['join_address']}"
+        print(line)
+        spec = fleet.get("speculating", 0)
+        ages = [w.get("inflight_age_max") for w in workers
+                if w.get("inflight_age_max") is not None]
+        if spec or ages:
+            line = f"    stragglers: speculating={spec}"
+            if ages:
+                line += f" inflight_age_max={max(ages):.1f}s"
+            wins, losses = (fleet.get("speculation_wins", 0),
+                            fleet.get("losers_discarded", 0))
+            if wins or losses:
+                line += f" (wins={wins} losers_discarded={losses})"
+            print(line)
     if st.get("error"):
         print(f"    error: {st['error']}")
 
@@ -728,6 +752,19 @@ def main(argv=None):
                          "width")
     ap.add_argument("--eval-timeout", type=float, default=None,
                     help="daemon: default seconds per measurement")
+    ap.add_argument("--heartbeat-s", type=float, default=None,
+                    help="daemon (remote fleet): fallback heartbeat "
+                         "interval; each worker's stall window is 3 missed "
+                         "beats of its own registered value")
+    ap.add_argument("--fleet-port", type=int, default=0,
+                    help="daemon (remote fleet): join socket kept open for "
+                         "the daemon's lifetime so workers can register "
+                         "mid-run (0 = ephemeral, printed in --status)")
+    ap.add_argument("--fleet-homogeneity", default="strict",
+                    choices=["strict", "normalize"],
+                    help="daemon (remote fleet): refuse mixed hardware "
+                         "fingerprints (strict, default) or admit and "
+                         "cost-calibrate them (normalize)")
     ap.add_argument("--corpus", default=None,
                     help="daemon: transfer-learning observation corpus "
                          "shared by all jobs (default: "
@@ -755,7 +792,9 @@ def main(argv=None):
             args.state_dir, objective=args.objective, workers=workers,
             parallelism=args.parallelism, host=args.host, port=args.port,
             eval_timeout=args.eval_timeout, verbose=not args.quiet,
-            corpus_path=args.corpus)
+            corpus_path=args.corpus, heartbeat_s=args.heartbeat_s,
+            fleet_port=args.fleet_port,
+            fleet_homogeneity=args.fleet_homogeneity)
         service.serve_forever()
         return service
 

@@ -171,6 +171,32 @@ def main(argv=None):
                          "printed at startup)")
     ap.add_argument("--eval-timeout", type=float, default=None,
                     help="seconds per evaluation before it scores -inf")
+    ap.add_argument("--heartbeat-s", type=float, default=None,
+                    help="worker heartbeat interval: with --serve-worker the "
+                         "interval this daemon beats at; on the tuner side "
+                         "the fleet-wide fallback (each worker's stall "
+                         "window is 3 missed beats of its registered value)")
+    ap.add_argument("--fleet-port", type=int, default=None,
+                    metavar="PORT",
+                    help="remote backend: keep a join socket open for the "
+                         "whole run so launch/worker.py --join daemons can "
+                         "register mid-run (0 = ephemeral, printed; default "
+                         "0; with an explicit --fleet-port, --workers may be "
+                         "empty — the fleet starts when the first worker "
+                         "dials in)")
+    ap.add_argument("--fleet-homogeneity", default="strict",
+                    choices=["strict", "normalize"],
+                    help="mixed hardware fingerprints in one fleet: strict "
+                         "(default) refuses them; normalize admits them and "
+                         "calibrates cost_seconds across partitions from "
+                         "duplicate completions")
+    ap.add_argument("--no-speculation", action="store_true",
+                    help="remote backend: disable speculative re-execution "
+                         "of straggling measurements")
+    ap.add_argument("--speculation-factor", type=float, default=4.0,
+                    help="duplicate an in-flight measurement once its age "
+                         "exceeds this multiple of the per-fidelity p95 "
+                         "completion time (first result wins, recorded once)")
     ap.add_argument("--wall-clock", type=float, default=None,
                     help="stop tuning after this many seconds (wall-clock "
                          "budget mode; combines with --budget; also bounds "
@@ -235,8 +261,11 @@ def main(argv=None):
                  "daemon) are different processes")
     workers = ([w.strip() for w in args.workers.split(",") if w.strip()]
                if args.workers else None)
-    if args.executor_backend == "remote" and not workers:
-        ap.error("--backend remote needs --workers host:port,...")
+    if (args.executor_backend == "remote" and not workers
+            and args.fleet_port is None):
+        ap.error("--backend remote needs --workers host:port,... "
+                 "(or an explicit --fleet-port to start an empty elastic "
+                 "fleet that workers --join mid-run)")
 
     cfg = get_config(args.arch)
     shape_kind = "train" if args.shape.startswith("train") else "serve"
@@ -256,11 +285,13 @@ def main(argv=None):
         # worker mode: serve this cell's objective to a remote tuner.  The
         # evaluator (and its compile cache) lives here; only points and
         # results cross the wire, and the tuner host persists the memo.
-        from repro.tuning.remote import WorkerServer
+        from repro.tuning.remote import DEFAULT_HEARTBEAT_S, WorkerServer
 
         server = WorkerServer(evaluator, host=args.worker_host,
                               port=args.worker_port,
-                              slots=max(1, args.parallelism))
+                              slots=max(1, args.parallelism),
+                              heartbeat_s=(args.heartbeat_s
+                                           or DEFAULT_HEARTBEAT_S))
         print(f"[tune] serving measurement worker for ({args.arch} x "
               f"{args.shape}) on {server.host}:{server.port} "
               f"(slots={server.slots}); point the tuner at it with "
@@ -271,24 +302,34 @@ def main(argv=None):
             print("[tune] worker interrupted; shutting down")
         return None
     ckpt = (args.out + ".ckpt") if args.out else None
-    tuner = Tuner(
-        evaluator, space,
-        TunerConfig(algorithm=args.algo, budget=args.budget, seed=args.seed,
-                    checkpoint_path=ckpt,
-                    parallelism=args.parallelism,
-                    executor_backend=args.executor_backend,
-                    eval_timeout=args.eval_timeout,
-                    wall_clock_budget=args.wall_clock,
-                    loop=args.loop,
-                    memo_cache_path=args.memo_cache,
-                    cost_aware=args.cost_aware,
-                    multi_fidelity=args.multi_fidelity,
-                    mf_eta=args.mf_eta,
-                    mf_min_fidelity=args.mf_min_fidelity,
-                    mf_preempt=not args.no_mf_preempt,
-                    workers=workers,
-                    transfer=_transfer_config(args)),
-    )
+    tc = TunerConfig(algorithm=args.algo, budget=args.budget, seed=args.seed,
+                     checkpoint_path=ckpt,
+                     parallelism=args.parallelism,
+                     executor_backend=args.executor_backend,
+                     eval_timeout=args.eval_timeout,
+                     wall_clock_budget=args.wall_clock,
+                     loop=args.loop,
+                     memo_cache_path=args.memo_cache,
+                     cost_aware=args.cost_aware,
+                     multi_fidelity=args.multi_fidelity,
+                     mf_eta=args.mf_eta,
+                     mf_min_fidelity=args.mf_min_fidelity,
+                     mf_preempt=not args.no_mf_preempt,
+                     workers=workers,
+                     transfer=_transfer_config(args))
+    # elastic-fleet knobs (remote backend only; no flat-kwarg legacy names)
+    if args.fleet_port is not None:
+        tc.executor.fleet_port = args.fleet_port
+    tc.executor.fleet_homogeneity = args.fleet_homogeneity
+    tc.executor.speculation = not args.no_speculation
+    tc.executor.speculation_factor = args.speculation_factor
+    tc.executor.heartbeat_s = args.heartbeat_s
+    tuner = Tuner(evaluator, space, tc)
+    pool = tuner.executor.remote_pool
+    if pool is not None and pool.join_address:
+        print(f"[tune] elastic fleet: workers can join mid-run with "
+              f"launch/worker.py --join <host>:"
+              f"{pool.join_address.rsplit(':', 1)[1]}")
     history = tuner.run()
     tuner.close()
     if args.multi_fidelity and tuner.rung_scheduler is not None:

@@ -24,9 +24,11 @@ never crosses the wire).  The resolved object may be an
 ``as_evaluator`` normalizes it exactly as the local backends do.
 
 The daemon registers with the connecting tuner, heartbeats every
-``--heartbeat`` seconds, pulls ``(point, fidelity)`` tasks into a
+``--heartbeat-s`` seconds, pulls ``(point, fidelity)`` tasks into a
 ``--slots``-wide measurement pool, and streams results back in
-completion order.  It never touches the memo cache — results are
+completion order.  With ``--join HOST:PORT`` the direction flips: the
+daemon dials a *running* tuner's join socket and registers mid-run
+(elastic fleets) — the session is otherwise identical.  It never touches the memo cache — results are
 persisted by the tuner host, so workers need no shared filesystem.  A
 tuner disconnect ends the session and the daemon goes back to
 accepting, so a fleet survives tuner restarts.
@@ -36,6 +38,7 @@ from __future__ import annotations
 import argparse
 import importlib
 import os
+import signal
 import traceback
 
 from repro.tuning.remote import DEFAULT_HEARTBEAT_S, WorkerServer
@@ -94,14 +97,28 @@ def main(argv=None):
                          "append () to call it as a zero-arg factory")
     ap.add_argument("--host", default="0.0.0.0",
                     help="interface to listen on (default: all)")
-    ap.add_argument("--port", type=int, default=9123,
-                    help="port to listen on (0 = ephemeral, printed)")
+    ap.add_argument("--port", type=int, default=None,
+                    help="port to listen on (0 = ephemeral, printed; "
+                         "default 9123, or ephemeral with --join)")
     ap.add_argument("--slots", type=int, default=1,
                     help="concurrent measurements this host runs "
                          "(fleet parallelism = sum of slots)")
-    ap.add_argument("--heartbeat", type=float, default=DEFAULT_HEARTBEAT_S,
+    ap.add_argument("--heartbeat-s", "--heartbeat", dest="heartbeat_s",
+                    type=float, default=DEFAULT_HEARTBEAT_S,
                     help="seconds between heartbeats (the tuner declares "
                          "this worker dead after 3 missed ones)")
+    ap.add_argument("--join", default=None, metavar="HOST:PORT",
+                    help="elastic mode: dial a running tuner's join socket "
+                         "and register mid-run instead of listening for "
+                         "tuners to connect here")
+    ap.add_argument("--join-retry-s", type=float, default=None,
+                    help="with --join: keep re-dialing every N seconds "
+                         "through tuner restarts (default: one-shot — "
+                         "serve one session and exit)")
+    ap.add_argument("--fingerprint-tag", default=None,
+                    help="append a tag to the hardware fingerprint shipped "
+                         "at register time (testing: simulate distinct "
+                         "hardware partitions on one host)")
     ap.add_argument("--serve-startup-error", action="store_true",
                     help="when the objective fails to resolve, keep serving "
                          "in error mode (register replies carry the error, "
@@ -124,20 +141,39 @@ def main(argv=None):
             raise
         startup_error = str(e)
 
+    port = args.port if args.port is not None else (0 if args.join else 9123)
     server = WorkerServer(objective,
-                          host=args.host, port=args.port,
-                          slots=args.slots, heartbeat_s=args.heartbeat,
+                          host=args.host, port=port,
+                          slots=args.slots, heartbeat_s=args.heartbeat_s,
                           startup_error=startup_error)
+    if args.fingerprint_tag is not None:
+        server.fingerprint = dict(server.fingerprint,
+                                  tag=args.fingerprint_tag)
     if startup_error is not None:
         print(f"[worker] pid={os.getpid()} serving ERROR MODE on "
               f"{server.host}:{server.port} — registering tuners will be "
               "told the startup error", flush=True)
+    elif args.join:
+        print(f"[worker] pid={os.getpid()} joining fleet at {args.join} "
+              f"with {args.objective!r} (slots={server.slots})", flush=True)
     else:
         print(f"[worker] pid={os.getpid()} serving {args.objective!r} on "
               f"{server.host}:{server.port} (slots={server.slots})",
               flush=True)
+    if args.join:
+        # SIGTERM on a joined daemon = clean deregistration: tell the
+        # pool we are leaving so it drains our in-flight results instead
+        # of burning a stall window on reinjection.  (SIGKILL still
+        # exercises the crash path, deliberately.)
+        def _leave(signum, frame):
+            print("[worker] SIGTERM: leaving fleet cleanly", flush=True)
+            server.request_leave()
+        signal.signal(signal.SIGTERM, _leave)
     try:
-        server.serve_forever()
+        if args.join:
+            server.join(args.join, retry_s=args.join_retry_s)
+        else:
+            server.serve_forever()
     except KeyboardInterrupt:
         print("[worker] interrupted; shutting down")
     return server

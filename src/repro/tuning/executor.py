@@ -113,7 +113,7 @@ from repro.tuning.cache import (
     open_store,
 )
 from repro.tuning.objective import Evaluator, as_evaluator
-from repro.tuning.remote import RemoteWorkerPool
+from repro.tuning.remote import FleetOptions, RemoteWorkerPool
 
 BACKENDS = ("serial", "thread", "process", "remote")
 
@@ -402,6 +402,7 @@ class EvaluationExecutor:
         workers: Optional[Sequence[str]] = None,
         pool=None,
         corpus=None,
+        fleet: Optional[FleetOptions] = None,
     ):
         self.objective = as_evaluator(objective)
         self.space = space
@@ -432,10 +433,14 @@ class EvaluationExecutor:
         if self.backend not in BACKENDS:
             raise ValueError(
                 f"unknown executor backend {self.backend!r}; one of {BACKENDS}")
-        if self.backend == "remote" and not workers and pool is None:
+        self.fleet = fleet
+        elastic = fleet is not None and fleet.listen_port is not None
+        if (self.backend == "remote" and not workers and pool is None
+                and not elastic):
             raise ValueError(
                 "backend='remote' needs workers=['host:port', ...] "
-                "(launch/worker.py daemons) or a shared pool=")
+                "(launch/worker.py daemons), a shared pool=, or fleet= "
+                "with a join socket for workers to dial in")
         if workers and self.backend != "remote":
             raise ValueError(
                 f"workers= is only meaningful with backend='remote' "
@@ -470,8 +475,15 @@ class EvaluationExecutor:
             # connect eagerly: fail fast on an unreachable fleet, and the
             # drivers size their in-flight window off the fleet's actual
             # capacity (registered worker slots), not a local guess
-            self._pool = RemoteWorkerPool(self.workers,
-                                          eval_timeout=self.timeout)
+            self._pool = RemoteWorkerPool(self.workers or [],
+                                          eval_timeout=self.timeout,
+                                          fleet=self.fleet)
+
+    @property
+    def remote_pool(self) -> Optional[RemoteWorkerPool]:
+        """The live fleet (remote backend only) — drivers use it to print
+        the join address and to render speculation / straggler status."""
+        return self._pool if self.backend == "remote" else None
 
     @property
     def parallelism(self) -> int:

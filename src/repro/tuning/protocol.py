@@ -39,8 +39,18 @@ Version 2 message set (on top of v1's task/result/heartbeat/bye):
 ``list_jobs``        client -> service
 ``jobs``             service -> client: one summary row per job
 ``cancel_job``       client -> service: ``{"job_id": ...}``
+``leaving``          worker -> tuner: clean deregistration — the pool
+                     stops dispatching here, drains this worker's
+                     in-flight results, then ends the session with
+                     ``bye`` (elastic fleets)
 ``error``            either direction: ``{"error": "..."}``
 ===================  ====================================================
+
+A v2 worker's ``register`` reply additionally carries a
+``fingerprint`` object (``tundb.hardware_fingerprint()`` form) so the
+pool can partition a mixed fleet by hardware; v1 workers simply omit
+it and land in the synthetic "unknown" partition.  Both sides ignore
+unknown keys, so every addition above is invisible to a v1 peer.
 
 This module is deliberately stdlib-only (no jax, no numpy): worker
 daemons and thin clients import it on hosts that have nothing else
