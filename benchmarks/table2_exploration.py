@@ -7,6 +7,14 @@ between).
 
 CSV rows: table2,<workload>,<algo>,<param>,<coverage_pct>
           table2_mean,<algo>,<mean_coverage_pct>
+
+``--scheduler asha,hyperband,pbt`` reports the same coverage diagnostic
+with the *trial scheduler* varied instead of the search engine (one
+engine, the schedulers' different budget allocation — early-stopping
+ladders vs mutating populations — is what moves coverage):
+
+    table2_sched,<workload>,<scheduler>,<param>,<coverage_pct>
+    table2_sched_mean,<scheduler>,<mean_coverage_pct>
 """
 from __future__ import annotations
 
@@ -15,7 +23,7 @@ import argparse
 import numpy as np
 
 from benchmarks.workloads import MEASURED_WORKLOADS, surrogate_objective
-from repro.core import SearchSpace, Tuner, TunerConfig
+from repro.core import MultiFidelityConfig, SearchSpace, Tuner, TunerConfig
 
 ALGOS = ("bo", "ga", "nms")
 
@@ -40,8 +48,42 @@ def run(budget: int = 50, emit=print):
     return means
 
 
+def run_schedulers(schedulers, budget: int = 50, emit=print):
+    from benchmarks.fig5_tuning_curves import FidelitySurrogate
+
+    per_kind = {k: [] for k in schedulers}
+    for w in MEASURED_WORKLOADS:
+        space = SearchSpace.from_dicts(w["space"])
+        for kind in schedulers:
+            obj = FidelitySurrogate(surrogate_objective(w))
+            t = Tuner(obj, space,
+                      TunerConfig(algorithm="random", budget=budget, seed=0,
+                                  verbose=False,
+                                  multi_fidelity=MultiFidelityConfig(
+                                      enabled=True, scheduler=kind,
+                                      min_fidelity=1 / 9, eta=3)))
+            h = t.run()
+            t.close()
+            for name, f in h.sampled_range_fraction().items():
+                emit(f"table2_sched,{w['name']},{kind},{name},{100*f:.0f}")
+                per_kind[kind].append(f)
+    means = {}
+    for kind in schedulers:
+        means[kind] = float(np.mean(per_kind[kind]))
+        emit(f"table2_sched_mean,{kind},{100*means[kind]:.1f}")
+    return means
+
+
 def main(argv=None):
-    argparse.ArgumentParser().parse_args(argv)
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scheduler", default=None,
+                    help="comma-separated trial schedulers to compare "
+                         "(asha,hyperband,pbt) instead of the search-"
+                         "engine comparison")
+    args = ap.parse_args(argv)
+    if args.scheduler:
+        kinds = [k.strip() for k in args.scheduler.split(",") if k.strip()]
+        return run_schedulers(kinds)
     run()
 
 

@@ -30,12 +30,14 @@ from repro.core.neldermead import NelderMead
 from repro.core.observation import Observation
 from repro.core.random_search import RandomSearch
 from repro.core.space import CatDim, IntDim, SearchSpace
-from repro.core.tuner import (ENGINES, ExecutorConfig, MultiFidelityConfig,
-                              TransferConfig, Tuner, TunerConfig)
+from repro.core.tuner import (ENGINES, ExecutorConfig, HyperBandConfig,
+                              MultiFidelityConfig, PBTConfig, TransferConfig,
+                              Tuner, TunerConfig)
 
 __all__ = [
     "BayesOpt", "CatDim", "ENGINES", "Engine", "ExecutorConfig",
-    "Exhaustive", "GaussianProcess", "GeneticAlgorithm", "History", "IntDim",
-    "MultiFidelityConfig", "NelderMead", "Observation", "RandomSearch",
-    "SearchSpace", "TransferConfig", "TransferPrior", "Tuner", "TunerConfig",
+    "Exhaustive", "GaussianProcess", "GeneticAlgorithm", "History",
+    "HyperBandConfig", "IntDim", "MultiFidelityConfig", "NelderMead",
+    "Observation", "PBTConfig", "RandomSearch", "SearchSpace",
+    "TransferConfig", "TransferPrior", "Tuner", "TunerConfig",
 ]

@@ -40,6 +40,11 @@ class Evaluation:
     #: fraction of a full measurement this value came from (multi-fidelity
     #: tuning records partial measurements too; 1.0 = exact/full)
     fidelity: float = 1.0
+    #: scheduler coordinate (ASHA rung / HyperBand global rung / PBT step)
+    rung: Optional[int] = None
+    #: trial ancestry (HyperBand bracket "b<idx>", PBT lineage "m<k>");
+    #: resume replay routes scheduler state reconstruction by it
+    lineage: Optional[str] = None
 
 
 class History:
@@ -62,9 +67,12 @@ class History:
 
     def add(self, point: Dict, value: float, cost_seconds: float = 0.0,
             meta: Optional[dict] = None,
-            fidelity: float = 1.0) -> Evaluation:
+            fidelity: float = 1.0,
+            rung: Optional[int] = None,
+            lineage: Optional[str] = None) -> Evaluation:
         ev = Evaluation(dict(point), float(value), len(self.evals),
-                        cost_seconds, meta or {}, float(fidelity))
+                        cost_seconds, meta or {}, float(fidelity),
+                        rung, lineage)
         self.evals.append(ev)
         key = self.space.key(point)
         self._by_key[key] = ev
@@ -83,7 +91,8 @@ class History:
     def add_observations(self, observations: List[Observation]
                          ) -> List[Evaluation]:
         """Append completed :class:`Observation` records (in order)."""
-        return [self.add(o.point, o.value, o.cost_seconds, o.meta, o.fidelity)
+        return [self.add(o.point, o.value, o.cost_seconds, o.meta, o.fidelity,
+                         o.rung, o.lineage)
                 for o in observations]
 
     def observations(self) -> List[Observation]:
@@ -92,6 +101,7 @@ class History:
         service serializes over the wire."""
         return [Observation(point=dict(e.point), value=e.value,
                             cost_seconds=e.cost_seconds, fidelity=e.fidelity,
+                            rung=e.rung, lineage=e.lineage,
                             meta=dict(e.meta))
                 for e in self.evals]
 
@@ -214,7 +224,8 @@ class History:
             [
                 {"point": e.point, "value": e.value, "index": e.index,
                  "cost_seconds": e.cost_seconds, "meta": e.meta,
-                 "fidelity": e.fidelity}
+                 "fidelity": e.fidelity, "rung": e.rung,
+                 "lineage": e.lineage}
                 for e in self.evals
             ]
         )
@@ -231,5 +242,6 @@ class History:
         h = cls(space)
         for rec in json.loads(pathlib.Path(path).read_text()):
             h.add(rec["point"], rec["value"], rec.get("cost_seconds", 0.0),
-                  rec.get("meta"), rec.get("fidelity", 1.0))
+                  rec.get("meta"), rec.get("fidelity", 1.0),
+                  rec.get("rung"), rec.get("lineage"))
         return h

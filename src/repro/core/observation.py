@@ -32,8 +32,15 @@ class Observation:
                       or free, e.g. a memoized repeat)
     ``fidelity``      fraction of a full measurement the value came from
                       (1.0 = exact/full; < 1.0 = cheaper, noisier)
-    ``rung``          successive-halving rung the measurement ran at
-                      (``None`` = outside any rung ladder)
+    ``rung``          scheduler coordinate the measurement ran at — the
+                      successive-halving rung for ASHA, the *global*
+                      (bracket-offset) rung for HyperBand, the step
+                      index for PBT (``None`` = outside any scheduler)
+    ``lineage``       trial-ancestry tag for scheduler provenance —
+                      HyperBand's bracket (``b<idx>``), PBT's member
+                      lineage (``m<k>``); ``None`` = no lineage.  The
+                      resume path routes ``replay`` by it, and PBT's
+                      checkpoint-fork steps are memo-keyed by it
     ``meta``          JSON-serializable annotations from the evaluator
     """
 
@@ -42,6 +49,7 @@ class Observation:
     cost_seconds: float = 0.0
     fidelity: float = 1.0
     rung: Optional[int] = None
+    lineage: Optional[str] = None
     meta: dict = field(default_factory=dict)
 
     def to_dict(self) -> dict:
@@ -49,7 +57,8 @@ class Observation:
         return {
             "point": dict(self.point), "value": self.value,
             "cost_seconds": self.cost_seconds, "fidelity": self.fidelity,
-            "rung": self.rung, "meta": dict(self.meta),
+            "rung": self.rung, "lineage": self.lineage,
+            "meta": dict(self.meta),
         }
 
     @classmethod
@@ -59,5 +68,6 @@ class Observation:
             cost_seconds=float(d.get("cost_seconds", 0.0)),
             fidelity=float(d.get("fidelity", 1.0)),
             rung=d.get("rung"),
+            lineage=d.get("lineage"),
             meta=dict(d.get("meta") or {}),
         )

@@ -64,7 +64,7 @@ import math
 import pathlib
 import threading
 import time
-from dataclasses import asdict, dataclass, fields
+from dataclasses import asdict, dataclass, field, fields
 from typing import Callable, Dict, List, Optional, Union
 
 import numpy as np
@@ -174,21 +174,75 @@ class ExecutorConfig:
 
 
 @dataclass
-class MultiFidelityConfig:
-    """Successive-halving (ASHA) knobs; ``enabled=False`` = plain loop.
+class HyperBandConfig:
+    """HyperBand-specific knobs (``multi_fidelity.scheduler = "hyperband"``).
 
-    ``enabled``           screen candidates at partial fidelity, promote
-                          survivors rung by rung; budget then counts
-                          full-measurement *equivalents* (sum of
-                          fidelities), not evaluations
+    ``brackets``  how many ASHA brackets to hedge across (deepest ladders
+                  first); ``None`` = every bracket the fidelity range
+                  supports, ``s_max + 1``
+    """
+
+    brackets: Optional[int] = None
+
+    def to_dict(self) -> dict:
+        return asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Optional[dict]) -> "HyperBandConfig":
+        if d is None:
+            return cls()
+        _check_keys(d, {f.name for f in fields(cls)}, "HyperBandConfig")
+        return cls(**d)
+
+
+@dataclass
+class PBTConfig:
+    """Population-Based Training knobs (``multi_fidelity.scheduler = "pbt"``).
+
+    ``population``        steady-state population size
+    ``exploit_quantile``  cull fraction (bottom) == donor fraction (top)
+    ``perturb_prob``      per-dimension explore mutation probability
+    ``step_fidelity``     fidelity of every PBT step (``None`` =
+                          ``multi_fidelity.min_fidelity``)
+    """
+
+    population: int = 6
+    exploit_quantile: float = 0.25
+    perturb_prob: float = 0.25
+    step_fidelity: Optional[float] = None
+
+    def to_dict(self) -> dict:
+        return asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Optional[dict]) -> "PBTConfig":
+        if d is None:
+            return cls()
+        _check_keys(d, {f.name for f in fields(cls)}, "PBTConfig")
+        return cls(**d)
+
+
+@dataclass
+class MultiFidelityConfig:
+    """Budget-allocation scheduler knobs; ``enabled=False`` = plain loop.
+
+    ``enabled``           route the run through the scheduler driver;
+                          budget then counts full-measurement
+                          *equivalents* (sum of fidelities), not
+                          evaluations
+    ``scheduler``         asha (successive halving, default) | hyperband
+                          (bracket hedging) | pbt (population-based
+                          training) — see ``repro.tuning.schedulers``
     ``eta``               rung reduction factor (fidelity ratio + survivor
                           fraction 1/eta between adjacent rungs)
-    ``min_fidelity``      bottom-rung fidelity floor
+    ``min_fidelity``      bottom-rung fidelity floor (and the default PBT
+                          step fidelity)
     ``promote_quantile``  per-rung survivor quantile (default 1/eta)
-    ``preempt``           kill in-flight promotions whose source rung has
-                          since outclassed them (executor preempt:
+    ``preempt``           kill in-flight work the scheduler has since
+                          declared pointless (executor preempt:
                           cancelled if unstarted, recorded normally if
                           already running)
+    ``hyperband``/``pbt`` per-scheduler sub-configs
     """
 
     enabled: bool = False
@@ -196,6 +250,9 @@ class MultiFidelityConfig:
     min_fidelity: float = 0.1
     promote_quantile: Optional[float] = None
     preempt: bool = True
+    scheduler: str = "asha"
+    hyperband: HyperBandConfig = field(default_factory=HyperBandConfig)
+    pbt: PBTConfig = field(default_factory=PBTConfig)
 
     def __bool__(self) -> bool:
         # ``if config.multi_fidelity:`` predates the sub-config and must
@@ -210,7 +267,9 @@ class MultiFidelityConfig:
         if isinstance(d, bool):  # submissions may spell it as a plain flag
             return cls(enabled=d)
         _check_keys(d, {f.name for f in fields(cls)}, "MultiFidelityConfig")
-        return cls(**d)
+        kw = {k: v for k, v in d.items() if k not in ("hyperband", "pbt")}
+        return cls(hyperband=HyperBandConfig.from_dict(d.get("hyperband")),
+                   pbt=PBTConfig.from_dict(d.get("pbt")), **kw)
 
 
 @dataclass
@@ -438,6 +497,13 @@ class Tuner:
                     f"(loop={config.loop!r}): rung promotion and preemption "
                     "are decided per completion, which a batch barrier "
                     "cannot express")
+            from repro.tuning.schedulers import SCHEDULER_KINDS
+            if getattr(config.multi_fidelity,
+                       "scheduler", "asha") not in SCHEDULER_KINDS:
+                raise ValueError(
+                    f"unknown multi_fidelity.scheduler "
+                    f"{config.multi_fidelity.scheduler!r}; "
+                    f"one of {SCHEDULER_KINDS}")
             if config.algorithm == "bo":
                 # partial observations enter the surrogate with a fidelity
                 # feature, never as exact values
@@ -551,11 +617,12 @@ class Tuner:
         )
 
     def _record(self, r: EvalResult, fidelity: float = 1.0,
-                rung: Optional[int] = None) -> None:
+                rung: Optional[int] = None,
+                lineage: Optional[str] = None) -> None:
         """tell + append + checkpoint for one completed evaluation."""
         obs = Observation(point=r.point, value=r.value,
                           cost_seconds=r.cost_seconds, fidelity=fidelity,
-                          rung=rung, meta=r.meta)
+                          rung=rung, lineage=lineage, meta=r.meta)
         self.engine.tell([obs])
         self.history.add_observations([obs])
         if self.config.checkpoint_path:
@@ -713,36 +780,44 @@ class Tuner:
         trustworthy incumbent.
 
         An objective without fidelity support cannot cheapen a
-        measurement, so rungs would all cost the same and "promotion"
-        would just re-measure points: the loop degenerates to the plain
-        completion-driven loop instead.
+        measurement, so for the *ladder* schedulers (asha, hyperband)
+        rungs would all cost the same and "promotion" would just
+        re-measure points: those degenerate to the plain
+        completion-driven loop.  PBT is not a ladder — its steps measure
+        *mutating* points (optionally warm-started via checkpoint-fork),
+        so it runs regardless of fidelity support.
         """
-        from repro.tuning.fidelity import RungScheduler
+        from repro.tuning.schedulers import build_scheduler
 
-        if not getattr(self.objective, "supports_fidelity", False):
+        cfg = self.config
+        mf = cfg.multi_fidelity
+        kind = getattr(mf, "scheduler", "asha") or "asha"
+        if (kind != "pbt"
+                and not getattr(self.objective, "supports_fidelity", False)):
             if self.config.verbose:
                 print("[tuner] objective has no fidelity support; "
                       "multi_fidelity degenerates to the async loop")
             return self._run_async(budget, wall_clock)
 
-        cfg = self.config
-        mf = cfg.multi_fidelity
-        sched = RungScheduler(eta=mf.eta,
-                              min_fidelity=mf.min_fidelity,
-                              promote_quantile=mf.promote_quantile)
-        self.rung_scheduler = sched  # observability (bench rung stats)
+        sched = build_scheduler(mf, space=self.space, seed=cfg.seed)
+        # observability (bench/service stats).  The attribute name
+        # predates the scheduler zoo; it now holds whichever
+        # TrialScheduler drives the run.
+        self.rung_scheduler = sched
         t_start = time.time()
         deadline = t_start + wall_clock if wall_clock is not None else None
         outstanding: List[PendingEval] = []
         spend = 0.0  # full-measurement equivalents consumed
-        # checkpoint resume: rebuild rung state (results AND promotion
-        # marks — see RungScheduler.replay) and budget accounting from the
-        # replayed history, so already-screened survivors stay promotable
-        # exactly once and the budget is not re-spent from zero
+        # checkpoint resume: rebuild scheduler state (rung results AND
+        # promotion marks for the ladders, population/lineages for PBT —
+        # see each scheduler's ``replay``) and budget accounting from the
+        # replayed history.  The scheduler owns the charge: duplicates
+        # and preempted placeholders replay at 0.0 spend.
         for e in self.history.evals:
-            sched.replay(self.space.key(e.point), e.point, e.value,
-                         e.fidelity)
-            spend += e.fidelity
+            spend += sched.replay(
+                self.space.key(e.point), e.point, e.value, e.fidelity,
+                rung=getattr(e, "rung", None),
+                lineage=getattr(e, "lineage", None), meta=e.meta)
 
         def consume(done: PendingEval) -> None:
             nonlocal spend
@@ -761,8 +836,18 @@ class Tuner:
             fid = float(fid)
             spend += fid  # memo hits count too: budget is logical spend
             sched.on_result(self.space.key(done.point), done.point,
-                            r.value, rung)
-            self._record(r, fidelity=fid, rung=rung)
+                            r.value, rung, fidelity=fid, meta=r.meta,
+                            lineage=done.lineage)
+            self._record(r, fidelity=fid, rung=rung, lineage=done.lineage)
+
+        def dispatch(act) -> PendingEval:
+            pend = self.executor.submit(
+                [act.point], fidelity=act.fidelity, rung=act.rung,
+                state=act.state, lineage=act.lineage)[0]
+            sched.on_started(self.space.key(act.point), act.point, act.rung,
+                             lineage=act.lineage)
+            outstanding.append(pend)
+            return pend
 
         try:
             while spend < budget and not self._stop.is_set():
@@ -771,50 +856,51 @@ class Tuner:
                     break
                 capacity = self.executor.parallelism - len(outstanding)
                 submitted_any = False
-                # promotions outrank fresh probes for free workers: a
-                # survivor's next rung is the highest-value measurement
-                # the ladder currently knows how to ask for
+                # scheduler-driven work outranks fresh probes for free
+                # workers: a survivor's next rung (or a PBT member's next
+                # step/fork) is the highest-value measurement the policy
+                # currently knows how to ask for
                 while capacity > 0:
-                    job = sched.next_promotion()
-                    if job is None:
+                    act = sched.next_action()
+                    if act is None:
                         break
-                    point, rung = job
-                    pend = self.executor.submit(
-                        [point], fidelity=sched.fidelity(rung), rung=rung)[0]
-                    sched.on_started(self.space.key(point), point, rung)
-                    outstanding.append(pend)
+                    dispatch(act)
                     capacity -= 1
                     submitted_any = True
-                if capacity > 0:
+                fresh = min(capacity, sched.fresh_quota(capacity))
+                if fresh > 0:
                     if deadline is not None:
                         self.engine.note_budget(
                             max(0.0, (deadline - time.time()) / wall_clock))
-                    points = self._ask_filtered(capacity, self.history)
-                    for p in points[:capacity]:
+                    points = self._ask_filtered(fresh, self.history)
+                    for p in points[:fresh]:
                         if self.history.seen(p) or self.history.pending(p):
                             continue  # known at some rung / already in flight
-                        pend = self.executor.submit(
-                            [p], fidelity=sched.base_fidelity, rung=0)[0]
-                        sched.on_started(self.space.key(p), p, 0)
+                        act = sched.admit(self.space.key(p), p)
+                        if act is None:
+                            continue  # refused (e.g. PBT population full)
+                        dispatch(act)
                         self.history.mark_inflight([p])
-                        outstanding.append(pend)
                         submitted_any = True
-                # preemption scan: an in-flight promotion whose source-rung
-                # value fell below the current cutoff cannot win anything
-                # by finishing (the cutoff can transiently dip when the
-                # survivor count increments — see RungScheduler.dominated)
+                # preemption scan: work the scheduler has since declared
+                # pointless — an ASHA/HyperBand promotion whose source-rung
+                # value fell below the current cutoff, a PBT step of a
+                # culled member — cannot win anything by finishing
                 if mf.preempt:
                     for pend in list(outstanding):
-                        if (pend.rung and not pend.preempted
-                                and not pend.done()
-                                and sched.dominated(self.space.key(pend.point),
-                                                    pend.rung)):
-                            if self.executor.preempt(pend) == "cancelled":
-                                outstanding.remove(pend)
-                                sched.on_preempted(self.space.key(pend.point),
-                                                   pend.rung)
-                            # "running": the worker got there first; its
-                            # result arrives and is recorded normally
+                        if (pend.preempted or pend.done()
+                                or sched.decide(self.space.key(pend.point),
+                                                pend.rung or 0,
+                                                lineage=pend.lineage)
+                                != "preempt"):
+                            continue
+                        if self.executor.preempt(pend) == "cancelled":
+                            outstanding.remove(pend)
+                            sched.on_preempted(self.space.key(pend.point),
+                                               pend.rung or 0,
+                                               lineage=pend.lineage)
+                        # "running": the worker got there first; its
+                        # result arrives and is recorded normally
                 if not outstanding:
                     if not submitted_any:
                         break  # engine exhausted, no promotions possible

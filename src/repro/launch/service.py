@@ -489,7 +489,16 @@ class TuningService:
                 out["best"] = {"value": best.value, "point": best.point}
             sched = tuner.rung_scheduler
             if sched is not None:
-                out["rungs"] = sched.stats()
+                # "rungs" predates the scheduler zoo: rung-shaped rows
+                # for whichever ladder scheduler is driving (old clients
+                # render them as before); the full picture — kind,
+                # per-bracket tables, PBT population — rides "scheduler"
+                stats = sched.stats()
+                if all("rung" in row for row in stats):
+                    out["rungs"] = stats
+                out["scheduler"] = {"kind": getattr(sched, "kind", "asha"),
+                                    "stats": stats,
+                                    "snapshot": sched.snapshot()}
         else:
             hist = job.dir / "history.json"
             evals = []
@@ -693,10 +702,34 @@ def print_status(st: dict) -> None:
         tail = ", ".join(f"{v:.4g}" for v in curve[-8:])
         print(f"    best-so-far: ...{tail}" if len(curve) > 8
               else f"    best-so-far: {tail}")
-    for row in st.get("rungs") or []:
-        print(f"    rung {row['rung']} (f={row['fidelity']}): "
-              f"started={row['started']} completed={row['completed']} "
-              f"promoted={row['promoted']} preempted={row['preempted']}")
+    sched = st.get("scheduler") or {}
+    snap = sched.get("snapshot") or {}
+    if sched.get("kind") == "hyperband" and snap.get("brackets"):
+        for b in snap["brackets"]:
+            print(f"    bracket {b['bracket']} "
+                  f"(min_f={b['min_fidelity']}, spend={b['spend']:.4g}):")
+            for row in b.get("rungs") or []:
+                print(f"      rung {row['rung']} (f={row['fidelity']}): "
+                      f"started={row['started']} "
+                      f"completed={row['completed']} "
+                      f"promoted={row['promoted']} "
+                      f"preempted={row['preempted']}")
+    elif sched.get("kind") == "pbt" and snap:
+        row = (sched.get("stats") or [{}])[0]
+        best = row.get("best")
+        median = row.get("median")
+        print(f"    population {len(snap.get('members') or [])}"
+              f"/{snap.get('population')}: "
+              + (f"best={best:.6g} " if best is not None else "best=n/a ")
+              + (f"median={median:.6g} " if median is not None
+                 else "median=n/a ")
+              + f"steps={snap.get('steps')} forks={snap.get('forks')} "
+                f"preempted={snap.get('preempted')}")
+    else:
+        for row in st.get("rungs") or []:
+            print(f"    rung {row['rung']} (f={row['fidelity']}): "
+                  f"started={row['started']} completed={row['completed']} "
+                  f"promoted={row['promoted']} preempted={row['preempted']}")
     fleet = st.get("fleet") or {}
     if fleet.get("backend") == "remote":
         workers = fleet.get("workers", [])

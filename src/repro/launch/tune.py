@@ -84,12 +84,27 @@ def _transfer_config(args):
         job_id=f"{args.arch}:{args.shape}:{args.algo}:seed{args.seed}")
 
 
+def _apply_scheduler(args, tc):
+    """--scheduler + per-scheduler knobs -> the nested mf sub-config.
+    A non-ASHA scheduler implies multi-fidelity mode (that is the loop
+    the schedulers drive), so --multi-fidelity may be omitted."""
+    tc.multi_fidelity.scheduler = args.scheduler
+    if args.scheduler != "asha":
+        tc.multi_fidelity.enabled = True
+    tc.multi_fidelity.hyperband.brackets = args.hb_brackets
+    tc.multi_fidelity.pbt.population = args.pbt_population
+    tc.multi_fidelity.pbt.exploit_quantile = args.pbt_quantile
+    tc.multi_fidelity.pbt.perturb_prob = args.pbt_perturb_prob
+    tc.multi_fidelity.pbt.step_fidelity = args.pbt_step_fidelity
+    return tc
+
+
 def _submit(args, space):
     """--submit-to: ship the run to a service daemon, stream its progress."""
     from repro.launch.service import ServiceClient, print_status
     from repro.tuning.protocol import JobSpec
 
-    config = TunerConfig(
+    config = _apply_scheduler(args, TunerConfig(
         algorithm=args.algo, budget=args.budget, seed=args.seed,
         loop=args.loop, cost_aware=args.cost_aware,
         wall_clock_budget=args.wall_clock,
@@ -100,7 +115,7 @@ def _submit(args, space):
         mf_eta=args.mf_eta, mf_min_fidelity=args.mf_min_fidelity,
         mf_preempt=not args.no_mf_preempt,
         transfer=_transfer_config(args),
-    ).to_dict()
+    )).to_dict()
     spec = JobSpec(
         space=space.to_dicts(), config=config,
         name=args.job_name or f"{args.arch} x {args.shape} x {args.algo}",
@@ -237,6 +252,29 @@ def main(argv=None):
     ap.add_argument("--no-mf-preempt", action="store_true",
                     help="disable preemption of in-flight promotions whose "
                          "source rung has since outclassed them")
+    ap.add_argument("--scheduler", default="asha",
+                    choices=["asha", "hyperband", "pbt"],
+                    help="trial scheduler driving the multi-fidelity loop "
+                         "(implies --multi-fidelity when not asha): asha = "
+                         "one successive-halving ladder; hyperband = several "
+                         "ASHA brackets with staggered min-fidelities, "
+                         "budget split by completion; pbt = population-based "
+                         "training (exploit/explore forks over mutating "
+                         "points, warm-started via checkpoint-fork where the "
+                         "objective supports it)")
+    ap.add_argument("--hb-brackets", type=int, default=None,
+                    help="hyperband: number of brackets (default: one per "
+                         "rung of the deepest ladder)")
+    ap.add_argument("--pbt-population", type=int, default=6,
+                    help="pbt: steady-state population size")
+    ap.add_argument("--pbt-quantile", type=float, default=0.25,
+                    help="pbt: cull (bottom) and donor (top) quantile")
+    ap.add_argument("--pbt-perturb-prob", type=float, default=0.25,
+                    help="pbt: per-dimension mutation probability of an "
+                         "explore step (at least one dim always moves)")
+    ap.add_argument("--pbt-step-fidelity", type=float, default=None,
+                    help="pbt: fidelity of each step (default: "
+                         "--mf-min-fidelity)")
     ap.add_argument("--submit-to", default=None, metavar="HOST:PORT",
                     help="thin-client mode: submit this tuning run as a job "
                          "to a running launch/service.py daemon instead of "
@@ -317,6 +355,7 @@ def main(argv=None):
                      mf_preempt=not args.no_mf_preempt,
                      workers=workers,
                      transfer=_transfer_config(args))
+    _apply_scheduler(args, tc)
     # elastic-fleet knobs (remote backend only; no flat-kwarg legacy names)
     if args.fleet_port is not None:
         tc.executor.fleet_port = args.fleet_port
@@ -332,11 +371,24 @@ def main(argv=None):
               f"{pool.join_address.rsplit(':', 1)[1]}")
     history = tuner.run()
     tuner.close()
-    if args.multi_fidelity and tuner.rung_scheduler is not None:
-        for row in tuner.rung_scheduler.stats():
-            print(f"[tune] rung {row['rung']} (fidelity {row['fidelity']}): "
-                  f"started={row['started']} completed={row['completed']} "
-                  f"promoted={row['promoted']} preempted={row['preempted']}")
+    sched = tuner.rung_scheduler
+    if sched is not None:
+        kind = getattr(sched, "kind", "asha")
+        for row in sched.stats():
+            if kind == "pbt":
+                print(f"[tune] population: members={row['members']} "
+                      f"steps={row['steps']} forks={row['forks']} "
+                      f"preempted={row['preempted']} best={row['best']} "
+                      f"median={row['median']}")
+            else:
+                bracket = (f"bracket {row['bracket']} "
+                           if "bracket" in row else "")
+                print(f"[tune] {bracket}rung {row['rung']} "
+                      f"(fidelity {row['fidelity']}): "
+                      f"started={row['started']} "
+                      f"completed={row['completed']} "
+                      f"promoted={row['promoted']} "
+                      f"preempted={row['preempted']}")
     if not any(math.isfinite(e.value) for e in history.evals):
         print(f"[tune] no successful evaluations "
               f"({len(history)} run, all failed or budget expired first)")
@@ -345,7 +397,7 @@ def main(argv=None):
             out.parent.mkdir(parents=True, exist_ok=True)
             out.write_text(history.to_json())
         return history
-    full_only = (args.multi_fidelity
+    full_only = (tc.multi_fidelity.enabled
                  and any(e.fidelity >= 1.0 and math.isfinite(e.value)
                          for e in history.evals))
     best = history.best(full_fidelity_only=full_only)

@@ -127,7 +127,8 @@ class EvalResult:
 
 
 def run_objective(objective: Evaluator, point: Dict,
-                  fidelity: Optional[float] = None):
+                  fidelity: Optional[float] = None,
+                  resume_state: Optional[dict] = None):
     """One isolated evaluation: ``(value, seconds, meta)``.
 
     Module-level so the process backend can pickle it.  A raising
@@ -138,15 +139,23 @@ def run_objective(objective: Evaluator, point: Dict,
     this.  A lower fidelity is forwarded iff the evaluator declares
     ``supports_fidelity``; otherwise the measurement silently upgrades
     to full fidelity and ``meta["fidelity"]`` reports the upgrade.
+
+    ``resume_state`` is the checkpoint-fork blob (a prior step's
+    ``meta["fork_state"]``), forwarded iff the evaluator declares
+    ``supports_fork``; an evaluator without fork support measures the
+    point from scratch, which is correct, just colder.
     """
     full = fidelity is None or fidelity >= 1.0
+    kwargs = {}
+    if resume_state is not None and getattr(objective, "supports_fork", False):
+        kwargs["resume_state"] = resume_state
     t0 = time.time()
     try:
         if full or not getattr(objective, "supports_fidelity", False):
-            value, meta = objective(point)
+            value, meta = objective(point, **kwargs)
             delivered = 1.0
         else:
-            value, meta = objective(point, fidelity=float(fidelity))
+            value, meta = objective(point, fidelity=float(fidelity), **kwargs)
             delivered = float(fidelity)
         value = float(value)
         meta = dict(meta)
@@ -231,12 +240,29 @@ def memo_key(grid_key, fidelity: Optional[float]) -> tuple:
     return grid_key + ((_FID_TAG, round(float(fidelity), 9)),)
 
 
+_LIN_TAG = "__lineage__"
+
+
+def lineage_key(key, lineage: Optional[str], rung: Optional[int]) -> tuple:
+    """Isolate a *stateful* measurement's memo identity by its lineage
+    and step.
+
+    A checkpoint-forked step is not a pure function of (point, fidelity)
+    — it also depends on the opaque ``resume_state`` it continued from —
+    so two lineages (or two steps of one lineage) at the same point must
+    never share a memo hit.  Stateless measurements keep the plain
+    (point, fidelity) key and keep sharing, which is why this tag is
+    applied only when a state blob rides the submission."""
+    return tuple(key) + ((_LIN_TAG, str(lineage or ""), int(rung or 0)),)
+
+
 def grid_key_of(key) -> tuple:
-    """Strip the fidelity marker (if any) off a memo key."""
-    if key and isinstance(key[-1], tuple) and key[-1] \
-            and key[-1][0] == _FID_TAG:
-        return tuple(key[:-1])
-    return tuple(key)
+    """Strip the fidelity/lineage markers (if any) off a memo key."""
+    key = tuple(key)
+    while key and isinstance(key[-1], tuple) and key[-1] \
+            and key[-1][0] in (_FID_TAG, _LIN_TAG):
+        key = key[:-1]
+    return key
 
 
 class MemoCache:
@@ -357,18 +383,23 @@ class PendingEval:
     to ``-inf`` with ``meta={"timeout": True}`` (or measures it inline
     if the pool never actually started it).
 
-    ``fidelity``/``rung`` tag partial measurements for the
-    successive-halving scheduler (``None`` = full measurement, outside
-    any rung ladder); ``preempted`` records that the scheduler asked for
-    this evaluation to be killed — whether the kill landed is
-    ``preempt``'s return value, not this flag.
+    ``fidelity``/``rung`` tag partial measurements for the trial
+    scheduler (``None`` = full measurement, outside any scheduler);
+    ``state``/``lineage`` tag checkpoint-fork steps (PBT): ``state`` is
+    the opaque ``resume_state`` blob forwarded to the evaluator and
+    ``lineage`` the trial ancestry recorded in History.  ``preempted``
+    records that the scheduler asked for this evaluation to be killed —
+    whether the kill landed is ``preempt``'s return value, not this
+    flag.
     """
 
     __slots__ = ("point", "key", "index", "submitted_at", "deadline",
-                 "future", "fidelity", "rung", "preempted", "_result")
+                 "future", "fidelity", "rung", "state", "lineage",
+                 "preempted", "_result")
 
     def __init__(self, point, key, index, future=None, result=None,
-                 deadline=None, fidelity=None, rung=None):
+                 deadline=None, fidelity=None, rung=None, state=None,
+                 lineage=None):
         self.point = point
         self.key = key
         self.index = index
@@ -377,6 +408,8 @@ class PendingEval:
         self.future = future
         self.fidelity = fidelity
         self.rung = rung
+        self.state = state
+        self.lineage = lineage
         self.preempted = False
         self._result = result
 
@@ -537,7 +570,9 @@ class EvaluationExecutor:
     # -- completion-driven protocol ------------------------------------------
     def submit(self, points: Sequence[Dict],
                fidelity: Optional[float] = None,
-               rung: Optional[int] = None) -> List[PendingEval]:
+               rung: Optional[int] = None,
+               state: Optional[dict] = None,
+               lineage: Optional[str] = None) -> List[PendingEval]:
         """Dispatch evaluations without waiting; returns one pending each.
 
         Memo-cache hits come back already completed (zero cost,
@@ -550,8 +585,17 @@ class EvaluationExecutor:
         ``fidelity`` requests partial measurements (evaluator fidelity
         protocol); partial results are memoized under (grid key,
         fidelity) so they are only ever reused at the same fidelity.
-        ``rung`` is an opaque tag echoed on the pendings for the
-        successive-halving scheduler's bookkeeping.
+        ``rung`` is an opaque tag echoed on the pendings for the trial
+        scheduler's bookkeeping.
+
+        ``state`` is an opaque checkpoint-fork blob forwarded to the
+        evaluator as ``resume_state`` (PBT): a stateful submission is
+        not a pure function of (point, fidelity), so its memo key is
+        additionally tagged with (``lineage``, ``rung``) — forked
+        lineages never collide with each other or with stateless
+        measurements of the same point — and its result is memoized
+        in-process only: never persisted to the cross-run store, never
+        fed to the transfer corpus.
         """
         # an objective that cannot vary fidelity always delivers a full
         # measurement: key (and run) it as one, or identical full results
@@ -562,11 +606,14 @@ class EvaluationExecutor:
         out: List[PendingEval] = []
         for p in points:
             key = memo_key(self.space.key(p), fidelity)
+            if state is not None:
+                key = lineage_key(key, lineage, rung)
             self._seq += 1
             hit = self.cache.get(key)
             if hit is not None:
                 out.append(PendingEval(
                     dict(p), key, self._seq, fidelity=fidelity, rung=rung,
+                    state=state, lineage=lineage,
                     result=EvalResult(dict(p), hit.value, 0.0,
                                       dict(hit.meta, memoized=True))))
                 continue
@@ -585,30 +632,56 @@ class EvaluationExecutor:
                 hit = self.cache.get(key)
                 out.append(PendingEval(
                     dict(p), key, self._seq, fidelity=fidelity, rung=rung,
+                    state=state, lineage=lineage,
                     result=EvalResult(dict(p), hit.value, 0.0,
                                       dict(hit.meta, memoized=True))))
                 continue
             if stale is not None:
                 out.append(PendingEval(dict(p), key, self._seq, future=stale,
                                        deadline=eval_deadline,
-                                       fidelity=fidelity, rung=rung))
+                                       fidelity=fidelity, rung=rung,
+                                       state=state, lineage=lineage))
                 continue
             if self.backend == "serial":
                 out.append(PendingEval(dict(p), key, self._seq,
                                        fidelity=fidelity, rung=rung,
-                                       result=self._run_one(p, fidelity)))
+                                       state=state, lineage=lineage,
+                                       result=self._run_one(p, fidelity,
+                                                            state)))
                 r = out[-1].result()
-                self.cache.put(key, r, persist=not r.meta.get("timeout"))
-                self._corpus_add(r, fidelity)
+                self.cache.put(key, r, persist=state is None
+                               and not r.meta.get("timeout"))
+                if state is None:
+                    self._corpus_add(r, fidelity)
                 continue
-            fut = self._get_pool().submit(run_objective, self.objective, p,
-                                          fidelity)
+            fut = self._submit_to_pool(p, fidelity, state)
             self._inflight[key] = fut
             out.append(PendingEval(dict(p), key, self._seq, future=fut,
                                    deadline=eval_deadline,
-                                   fidelity=fidelity, rung=rung))
+                                   fidelity=fidelity, rung=rung,
+                                   state=state, lineage=lineage))
         self._flush()  # serial-path results + harvested strays
         return out
+
+    def _submit_to_pool(self, point: Dict, fidelity: Optional[float],
+                        state: Optional[dict]):
+        """Dispatch one measurement to the pool backend.
+
+        The stateless spelling is kept positionally identical to the
+        historical call so thread/process/remote pools and their tests
+        see the exact same submission; the ``resume_state`` argument is
+        appended only when a checkpoint-fork blob actually rides along.
+        """
+        if state is None:
+            return self._get_pool().submit(run_objective, self.objective,
+                                           point, fidelity)
+        return self._get_pool().submit(run_objective, self.objective,
+                                       point, fidelity, state)
+
+    @staticmethod
+    def _stateful_key(key) -> bool:
+        return bool(key) and isinstance(key[-1], tuple) and key[-1] \
+            and key[-1][0] == _LIN_TAG
 
     def _harvest(self, key, future) -> None:
         """Bank an abandoned-but-finished measurement into the memo."""
@@ -617,6 +690,11 @@ class EvaluationExecutor:
             del self._inflight[key]
         point = dict(zip(self.space.names, grid_key_of(key)))
         res = EvalResult(point, value, secs, meta)
+        if self._stateful_key(key):
+            # a checkpoint-fork step: valid only within its lineage —
+            # memoize in-process, never persist or feed the corpus
+            self.cache.put(key, res, persist=False)
+            return
         self.cache.put(key, res)
         self._corpus_add(res)  # a paid-for real measurement, late or not
 
@@ -638,8 +716,10 @@ class EvaluationExecutor:
             del self._inflight[pending.key]
             pending._result = EvalResult(dict(pending.point), value, secs,
                                          meta)
-            self.cache.put(pending.key, pending._result)
-            self._corpus_add(pending._result, pending.fidelity)
+            self.cache.put(pending.key, pending._result,
+                           persist=pending.state is None)
+            if pending.state is None:
+                self._corpus_add(pending._result, pending.fidelity)
         else:
             # an alias of a measurement another pending already finalized:
             # like every memoized path, it costs 0.0 — charging the full
@@ -700,15 +780,16 @@ class EvaluationExecutor:
                 # the real one).  Re-dispatch to the fleet with a fresh
                 # deadline — the timeout clock properly starts at
                 # dispatch, and this task never was dispatched.
-                fut = self._get_pool().submit(run_objective, self.objective,
-                                              pending.point, pending.fidelity)
+                fut = self._submit_to_pool(pending.point, pending.fidelity,
+                                           pending.state)
                 self._inflight[pending.key] = fut
                 pending.future = fut
                 pending.submitted_at = now
                 pending.deadline = (now + self.timeout
                                     if self.timeout is not None else None)
                 return False
-            pending._result = self._run_one(pending.point, pending.fidelity)
+            pending._result = self._run_one(pending.point, pending.fidelity,
+                                            pending.state)
         else:
             # genuinely running too long: abandon the stuck worker (it is
             # not joined); the pool survives
@@ -718,12 +799,14 @@ class EvaluationExecutor:
                                          secs, {"timeout": True})
         # memoize within this run, but never persist a timeout verdict to
         # the cross-run store: it reflects this run's timeout setting, not
-        # the configuration itself
+        # the configuration itself (stateful fork steps never persist)
         self.cache.put(pending.key, pending._result,
-                       persist=not pending._result.meta.get("timeout"))
+                       persist=pending.state is None
+                       and not pending._result.meta.get("timeout"))
         # the inline-measurement branch is a real measurement; the helper
         # skips the timeout verdicts itself
-        self._corpus_add(pending._result, pending.fidelity)
+        if pending.state is None:
+            self._corpus_add(pending._result, pending.fidelity)
         return True
 
     def next_completed(self, pendings: Sequence[PendingEval],
@@ -907,8 +990,10 @@ class EvaluationExecutor:
         return results
 
     def _run_one(self, point: Dict,
-                 fidelity: Optional[float] = None) -> EvalResult:
-        value, secs, meta = run_objective(self.objective, point, fidelity)
+                 fidelity: Optional[float] = None,
+                 state: Optional[dict] = None) -> EvalResult:
+        value, secs, meta = run_objective(self.objective, point, fidelity,
+                                          state)
         if self.timeout is not None and secs > self.timeout:
             value, meta = -math.inf, dict(meta, timeout=True)
         return EvalResult(dict(point), value, secs, meta)

@@ -33,6 +33,28 @@ the executor silently upgrades a low-fidelity request and records
 ``meta["fidelity"] = 1.0`` so a fidelity scheduler knows it got (and
 paid for) the real thing.
 
+Checkpoint-fork protocol (PBT)
+------------------------------
+
+An evaluator whose measurements can *continue from where a previous
+step left off* — a wall-clock harness that keeps its warmup, a learned
+model that keeps its weights — declares ``supports_fork = True`` and
+accepts an optional ``resume_state`` keyword: the opaque blob a
+previous step returned as ``meta["fork_state"]``.  The contract:
+
+* ``fork_state`` must be **JSON-serializable** — it rides the remote v2
+  task payload and the History checkpoint (a remote worker drops
+  non-JSON meta with ``meta_error``, losing the lineage's warm start);
+* ``resume_state=None`` (or absent) is a cold-start step, byte-for-byte
+  the plain call — the golden traces are pinned against this;
+* a step given a ``resume_state`` may be cheaper and/or continue an
+  accumulating measurement; it returns the *next* ``fork_state`` so the
+  lineage (or an exploit-fork clone of it) can continue.
+
+Evaluators that do not opt in still work under PBT: every step is an
+independent measurement of the member's current point (the executor
+never forwards ``resume_state`` to them).
+
 Cost attribution
 ----------------
 
@@ -67,11 +89,15 @@ class Evaluator:
 
     Subclasses that can cheapen a measurement set
     ``supports_fidelity = True`` and accept the optional ``fidelity``
-    keyword (see the module docstring for the contract).
+    keyword; subclasses that can continue a measurement from a prior
+    step's checkpoint set ``supports_fork = True`` and accept the
+    optional ``resume_state`` keyword (see the module docstring for
+    both contracts).
     """
 
     returns_meta = True
     supports_fidelity = False
+    supports_fork = False
 
     def __call__(self, point: Dict,
                  fidelity: Optional[float] = None) -> Tuple[float, dict]:
@@ -104,7 +130,8 @@ class CountingEvaluator(Evaluator):
     measurements — the quantity a shared memo cache is supposed to drive
     to zero on a repeated run.  Used by the cache-hit acceptance check in
     ``benchmarks/perf_iterations.py`` and the async-loop tests.
-    Forwards ``fidelity`` iff the wrapped evaluator supports it.
+    Forwards ``fidelity``/``resume_state`` iff the wrapped evaluator
+    supports the respective protocol.
     """
 
     def __init__(self, objective):
@@ -115,12 +142,20 @@ class CountingEvaluator(Evaluator):
     def supports_fidelity(self) -> bool:
         return self.inner.supports_fidelity
 
+    @property
+    def supports_fork(self) -> bool:
+        return getattr(self.inner, "supports_fork", False)
+
     def __call__(self, point: Dict,
-                 fidelity: Optional[float] = None) -> Tuple[float, dict]:
+                 fidelity: Optional[float] = None,
+                 resume_state: Optional[dict] = None) -> Tuple[float, dict]:
         self.calls += 1
+        kwargs = {}
+        if resume_state is not None and self.supports_fork:
+            kwargs["resume_state"] = resume_state
         if self.inner.supports_fidelity:
-            return self.inner(point, fidelity=fidelity)
-        return self.inner(point)
+            return self.inner(point, fidelity=fidelity, **kwargs)
+        return self.inner(point, **kwargs)
 
 
 def as_evaluator(objective) -> Evaluator:

@@ -46,6 +46,12 @@ Version 2 message set (on top of v1's task/result/heartbeat/bye):
 ``error``            either direction: ``{"error": "..."}``
 ===================  ====================================================
 
+A v2 ``task`` message may additionally carry a ``state`` field: the
+opaque checkpoint-fork blob (a prior step's ``meta["fork_state"]``,
+PBT lineages) the worker forwards to its objective as
+``resume_state``.  The pool only routes stateful tasks to v2 workers;
+a v1 worker never sees the field.
+
 A v2 worker's ``register`` reply additionally carries a
 ``fingerprint`` object (``tundb.hardware_fingerprint()`` form) so the
 pool can partition a mixed fleet by hardware; v1 workers simply omit

@@ -301,15 +301,20 @@ class _FleetCalibration:
 # ---------------------------------------------------------------------------
 
 class _RemoteTask:
-    __slots__ = ("id", "point", "fidelity", "timeout", "future", "dispatched",
-                 "holders", "resolved", "speculated", "spec_holders",
-                 "winner")
+    __slots__ = ("id", "point", "fidelity", "timeout", "state", "future",
+                 "dispatched", "holders", "resolved", "speculated",
+                 "spec_holders", "winner")
 
-    def __init__(self, task_id: int, point: Dict, fidelity, timeout):
+    def __init__(self, task_id: int, point: Dict, fidelity, timeout,
+                 state=None):
         self.id = task_id
         self.point = point
         self.fidelity = fidelity
         self.timeout = timeout
+        #: opaque checkpoint-fork blob (protocol v2 ``state`` field);
+        #: rides every copy of the task — reinjection, timeout
+        #: re-dispatch and speculation must all resume the same lineage
+        self.state = state
         self.future: Future = Future()
         # True once sent to any worker: the future is RUNNING from then
         # on (let-it-finish preemption), including across a reinjection
@@ -332,6 +337,19 @@ class _RemoteTask:
         #: (partition fp_id, raw seconds) of the winning measurement —
         #: pairs with a loser's raw seconds to calibrate partitions
         self.winner: Optional[Tuple[str, float]] = None
+
+
+def _task_msg(task: "_RemoteTask") -> Dict:
+    """Wire form of one task dispatch (shared by the dispatch loop and
+    the speculative re-dispatch so every copy carries the same payload).
+    ``state`` is a protocol-v2 field and is omitted when absent — v1
+    workers never see it because ``_pick``/``_speculate`` only route
+    stateful tasks to v2 workers."""
+    msg = {"type": "task", "id": task.id, "point": task.point,
+           "fidelity": task.fidelity, "timeout": task.timeout}
+    if task.state is not None:
+        msg["state"] = task.state
+    return msg
 
 
 class _WorkerConn:
@@ -663,7 +681,8 @@ class RemoteWorkerPool:
         return counters
 
     def submit(self, fn, objective, point: Dict,
-               fidelity: Optional[float] = None) -> Future:
+               fidelity: Optional[float] = None,
+               state: Optional[dict] = None) -> Future:
         """Queue one measurement; returns its Future.
 
         Signature-compatible with ``ThreadPoolExecutor.submit(
@@ -672,6 +691,10 @@ class RemoteWorkerPool:
         objective instance (that is the point of the remote backend:
         the objective's heavyweight state lives on the measurement
         host, only points and results cross the wire).
+
+        ``state`` is an opaque checkpoint-fork blob (PBT lineages): it
+        rides the protocol-v2 task payload as ``resume_state`` for the
+        worker's objective, so such tasks only dispatch to v2 workers.
         """
         with self._wake:
             if self._shutdown:
@@ -688,7 +711,7 @@ class RemoteWorkerPool:
                 # join socket): queue until the first daemon registers
             self._seq += 1
             task = _RemoteTask(self._seq, dict(point), fidelity,
-                               self.eval_timeout)
+                               self.eval_timeout, state)
             self._queue.append(task)
             self._wake.notify_all()
         return task.future
@@ -730,7 +753,14 @@ class RemoteWorkerPool:
 
     # -- internals -----------------------------------------------------------
     def _pick(self):
-        """Next (task, worker) pair, or None; caller holds the lock."""
+        """Next (task, worker) pair, or None; caller holds the lock.
+
+        A task carrying a checkpoint-fork ``state`` blob may only go to
+        a protocol-v2 worker (v1 workers would silently drop the resume
+        state and measure a cold start).  The queue is scanned in order
+        so a stateful task at the head does not starve stateless work
+        that a v1 worker could run right now.
+        """
         if not self._queue:
             return None
         best = None
@@ -741,7 +771,28 @@ class RemoteWorkerPool:
                     best = w
         if best is None:
             return None
-        return self._queue.popleft(), best
+        for i, task in enumerate(self._queue):
+            if task.state is None:
+                del self._queue[i]
+                return task, best
+            if best.protocol >= PROTOCOL_V2:
+                del self._queue[i]
+                return task, best
+            # stateful task, best worker is v1: any v2 worker with a
+            # free slot can take it instead
+            v2 = None
+            for w in self._workers:
+                free = w.slots - len(w.inflight)
+                if (w.alive and not w.draining and free > 0
+                        and w.protocol >= PROTOCOL_V2):
+                    if v2 is None or free > (v2.slots - len(v2.inflight)):
+                        v2 = w
+            if v2 is not None:
+                del self._queue[i]
+                return task, v2
+            # no v2 capacity: leave it queued, keep scanning for
+            # stateless work the v1 fleet can absorb
+        return None
 
     def _dispatch_loop(self) -> None:
         while True:
@@ -768,10 +819,7 @@ class RemoteWorkerPool:
                 continue
             task.dispatched = True
             try:
-                send_msg(worker.sock, {
-                    "type": "task", "id": task.id, "point": task.point,
-                    "fidelity": task.fidelity, "timeout": task.timeout,
-                })
+                send_msg(worker.sock, _task_msg(task))
             except OSError:
                 self._on_worker_down(worker)
 
@@ -853,17 +901,19 @@ class RemoteWorkerPool:
 
     def _finish_leave(self, worker: _WorkerConn) -> None:
         """End a draining worker's session once its in-flight is empty."""
-        with self._lock:
-            if not worker.alive:
-                return
-            self.clean_leaves += 1
         try:
             send_msg(worker.sock, {"type": "bye"})
         except OSError:
             pass
         # nothing in flight, nothing to reinject: _on_worker_down just
-        # marks it dead and handles the (empty-fleet) stranding rules
-        self._on_worker_down(worker)
+        # marks it dead and handles the (empty-fleet) stranding rules.
+        # The departure is counted only AFTER the alive set shrank (and
+        # only by whichever caller actually performed the transition):
+        # an observer that sees clean_leaves bump must never still see
+        # the leaver in alive_workers().
+        if self._on_worker_down(worker):
+            with self._lock:
+                self.clean_leaves += 1
 
     def _monitor_loop(self) -> None:
         while not self._shutdown:
@@ -921,7 +971,9 @@ class RemoteWorkerPool:
                 target = None
                 for w in sorted(free, key=lambda w: len(w.inflight)):
                     if w is not holder and w not in task.holders \
-                            and w.slots - len(w.inflight) > 0:
+                            and w.slots - len(w.inflight) > 0 \
+                            and (task.state is None
+                                 or w.protocol >= PROTOCOL_V2):
                         target = w
                         break
                 if target is None:
@@ -934,22 +986,23 @@ class RemoteWorkerPool:
                 plan.append((task, target))
         for task, target in plan:
             try:
-                send_msg(target.sock, {
-                    "type": "task", "id": task.id, "point": task.point,
-                    "fidelity": task.fidelity, "timeout": task.timeout,
-                })
+                send_msg(target.sock, _task_msg(task))
             except OSError:
                 self._on_worker_down(target)
 
-    def _on_worker_down(self, worker: _WorkerConn) -> None:
+    def _on_worker_down(self, worker: _WorkerConn) -> bool:
         """Mark dead + reinject its in-flight tasks (front of the queue:
         they have been waiting longest and a rung scheduler upstream may
         be blocked on them).  A task whose duplicate is still live on
         another worker is NOT reinjected — the surviving copy resolves
-        it (re-dispatching would just add a third measurement)."""
+        it (re-dispatching would just add a third measurement).
+
+        Returns True iff *this* call performed the alive->dead
+        transition (callers that want to count the departure exactly
+        once key off it)."""
         with self._wake:
             if not worker.alive:
-                return
+                return False
             worker.alive = False
             reinject = []
             for t in worker.inflight.values():
@@ -975,6 +1028,7 @@ class RemoteWorkerPool:
             for t in stranded:
                 if not t.future.done():
                     t.future.set_exception(err)
+        return True
 
 
 # ---------------------------------------------------------------------------
@@ -1160,7 +1214,8 @@ class WorkerServer:
     def _measure(self, conn, send_lock, msg) -> None:
         try:
             value, seconds, meta = self._run_objective(
-                self.objective, msg["point"], msg.get("fidelity"))
+                self.objective, msg["point"], msg.get("fidelity"),
+                msg.get("state"))
         except BaseException as e:  # run_objective already catches
             # objective errors; anything reaching here is worker
             # infrastructure breaking — report it rather than going

@@ -169,6 +169,37 @@ def test_rungscheduler_replay_marks_source_rung_promoted():
     assert s.rungs[1].results == [(("k",), 5.0)]
 
 
+def test_rungscheduler_replay_dedupes_preemption_race_records():
+    """Regression: a checkpoint written around a preemption race can
+    hold BOTH a preempted placeholder and a completed record for the
+    same (key, rung).  Replay used to charge budget for both and rank
+    the key twice; now the preempted record charges 0 and skips, and a
+    duplicate completion charges 0 and is not re-ranked."""
+    s = RungScheduler(eta=3.0, min_fidelity=0.1)
+    f0 = s.fidelity(0)
+    # the preempted placeholder measured nothing: no charge, no state
+    assert s.replay(("k",), {"x": 1}, 0.0, f0,
+                    meta={"preempted": True}) == 0.0
+    assert s.rungs[0].results == []
+    # the completed record charges once...
+    assert s.replay(("k",), {"x": 1}, 5.0, f0) == pytest.approx(f0)
+    # ...and its duplicate (same key, same rung) charges nothing
+    assert s.replay(("k",), {"x": 1}, 5.0, f0) == 0.0
+    assert s.rungs[0].results == [(("k",), 5.0)]
+    assert s.rungs[0].n_completed == 1
+
+
+def test_rungscheduler_replay_dedupe_is_per_rung_not_per_key():
+    """The same key legitimately completes once per rung of the ladder;
+    only same-rung duplicates are checkpoint artifacts."""
+    s = RungScheduler(eta=3.0, min_fidelity=0.1)
+    charged = [s.replay(("k",), {"x": 1}, 5.0, s.fidelity(r))
+               for r in range(s.n_rungs)]
+    assert charged == pytest.approx([s.fidelity(r)
+                                     for r in range(s.n_rungs)])
+    assert [r.n_completed for r in s.rungs] == [1] * s.n_rungs
+
+
 def test_rungscheduler_snapshot_is_jsonable_and_complete():
     s = RungScheduler(eta=3.0, min_fidelity=0.1)
     s.on_started(("a", 1), {"x": 0, "y": 1}, 0)
